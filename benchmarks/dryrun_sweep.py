@@ -1,0 +1,74 @@
+"""Run the full (architecture × input-shape × mesh) dry-run matrix and save
+one JSON per combo into results/dryrun/ (resumable; skips existing files).
+
+  PYTHONPATH=src python -m benchmarks.dryrun_sweep [--multi-pod-only] [--redo]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import gc
+import json
+import sys
+import traceback
+
+from repro.configs import ARCH_IDS
+from repro.configs.shapes import SHAPES
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def combo_path(arch, shape, multi_pod, suffix=""):
+    mesh = "2x16x16" if multi_pod else "16x16"
+    return os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh}{suffix}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--redo", action="store_true")
+    ap.add_argument("--only-mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--archs", default="")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import dryrun
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    archs = args.archs.split(",") if args.archs else ARCH_IDS
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.only_mesh]
+    failures = []
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in SHAPES:
+                path = combo_path(arch, shape, multi_pod)
+                if os.path.exists(path) and not args.redo:
+                    continue
+                tag = f"{arch} x {shape} x {'2x16x16' if multi_pod else '16x16'}"
+                print(f"== {tag}", flush=True)
+                try:
+                    res = dryrun(arch, shape, multi_pod=multi_pod, verbose=False)
+                    with open(path, "w") as f:
+                        json.dump(res, f, indent=2, default=str)
+                    if "skipped" in res:
+                        print(f"   SKIP: {res['skipped'][:80]}", flush=True)
+                    else:
+                        print(
+                            "   ok compute=%.3fs mem=%.3fs coll=%.3fs dom=%s "
+                            "useful=%.2f compile=%ss" % (
+                                res["compute_term_s"], res["memory_term_s"],
+                                res["collective_term_s"], res["dominant_term"],
+                                res["useful_flops_ratio"], res["compile_s"]),
+                            flush=True)
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    print(f"   FAIL {type(e).__name__}: {e}", flush=True)
+                    traceback.print_exc()
+                gc.collect()
+    print(f"sweep done; {len(failures)} failures", flush=True)
+    for t, e in failures:
+        print("  FAILED:", t, e[:200], flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,88 @@
+"""Aggregate results/dryrun/*.json into the §Roofline table.
+
+Per (arch × shape, single-pod): compute/memory/collective terms in seconds,
+dominant term, MODEL_FLOPS/HLO_FLOPS utilization, and a one-line "what would
+move the dominant term" note.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh 16x16] [--md]
+"""
+import argparse
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+NOTES = {
+    ("compute", "train"): "raise arithmetic intensity: bf16 matmul paths already used; larger per-chip batch or fewer recomputes (remat policy)",
+    ("compute", "prefill"): "quadratic attention dominates: sliding-window/block-sparse attention or more model-parallel heads",
+    ("compute", "decode"): "matmul-bound decode: absorb projections (MLA) / fuse QKV; batch more requests per chip",
+    ("memory", "train"): "activation traffic: bigger fusions (TPU) / fewer norm-precision casts; scan-block remat policy; grad-accum microbatching",
+    ("memory", "prefill"): "score-tensor traffic: flash-attention kernel keeps softmax in VMEM (kernels/flash)",
+    ("memory", "decode"): "KV-cache streaming bound: quantize cache to int8/bf16, MLA latent cache, sliding window",
+    ("collective", "train"): "bigger FSDP unit (scan_block_size), bf16 gather/reduce-scatter instead of f32, overlap collectives with compute",
+    ("collective", "prefill"): "TP all-reduce per layer: reduce-scatter+all-gather decomposition, sequence-parallel norms",
+    ("collective", "decode"): "per-token psum/all-reduce latency-bound: fewer TP ranks for decode, batch tokens, bf16 reduces",
+}
+
+
+def load(mesh: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        rows.append(r)
+    return rows
+
+
+def kind_of(shape: str) -> str:
+    return {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "decode"}[shape]
+
+
+def fmt_row(r):
+    if "skipped" in r:
+        return None
+    ct, mt, kt = (r["compute_term_s"], r["memory_term_s"],
+                  r["collective_term_s"])
+    dom = r["dominant_term"]
+    return {
+        "arch": r["arch"],
+        "shape": r["shape"],
+        "plan": r["plan"].split("(")[0],
+        "compute_s": ct,
+        "memory_s": mt,
+        "collective_s": kt,
+        "dominant": dom,
+        "useful": r["useful_flops_ratio"],
+        "note": NOTES[(dom, kind_of(r["shape"]))],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = [fmt_row(r) for r in load(args.mesh)]
+    rows = [r for r in rows if r]
+    if args.md:
+        print("| arch | shape | plan | compute s | memory s | collective s "
+              "| dominant | useful FLOP ratio |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(f"| {r['arch']} | {r['shape']} | {r['plan']} "
+                  f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+                  f"| {r['collective_s']:.3f} | **{r['dominant']}** "
+                  f"| {r['useful']:.2f} |")
+    else:
+        print("arch,shape,plan,compute_s,memory_s,collective_s,dominant,useful")
+        for r in rows:
+            print(f"{r['arch']},{r['shape']},{r['plan']},{r['compute_s']:.4f},"
+                  f"{r['memory_s']:.4f},{r['collective_s']:.4f},{r['dominant']},"
+                  f"{r['useful']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Benchmark harness: one entry per paper table/figure. Prints
+``name,value,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+import argparse
+import time
+
+
+def _csv(name, value, derived=""):
+    print(f"{name},{value},{derived}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the multi-minute measured benchmarks")
+    args = ap.parse_args()
+
+    print("name,value,derived", flush=True)
+
+    # -- Fig 2c analog: message-size latency model + FSDP unit dial ---------
+    from . import fig2c_messages
+
+    t0 = time.time()
+    f2c = fig2c_messages.run()
+    lat = f2c["latency_model"]
+    small = next(r for r in lat if r["msg_bytes"] == 400e3)
+    _csv("fig2c_effbw_0.4MB_1024ranks_GBs", small["bw_eff_1024 (GB/s)"],
+         small["bound"])
+    dial = f2c["fsdp_unit_dial"]["rows"]
+    k1 = next(r for r in dial if r["dp"] == 1024 and r["unit_k"] == 1)
+    k8 = next(r for r in dial if r["dp"] == 1024 and r["unit_k"] == 8)
+    _csv("fig2c_unit1_dp1024_effbw_GBs", k1["eff_bw_GBs"], k1["bound"])
+    _csv("fig2c_unit8_dp1024_effbw_GBs", k8["eff_bw_GBs"], k8["bound"])
+    _csv("fig2c_wall_s", round(time.time() - t0, 1))
+
+    # -- Fig 2b analog: strong scaling ---------------------------------------
+    from . import fig2b_scaling
+
+    t0 = time.time()
+    f2b = fig2b_scaling.run(fast=args.fast)
+    m1 = f2b["modeled_llama8b_unit1"]
+    worst = m1[-1]
+    _csv("fig2b_llama8b_dp1024_bound", worst["step_bound"],
+         f"tok/s/chip={worst['tokens_per_s_per_chip']}")
+    m8 = f2b["modeled_llama8b_unit8"][-1]
+    _csv("fig2b_llama8b_dp1024_unit8_bound", m8["step_bound"],
+         f"tok/s/chip={m8['tokens_per_s_per_chip']}")
+    if "measured_cpu_ddp" in f2b:
+        for r in f2b["measured_cpu_ddp"]:
+            _csv(f"fig2b_measured_ddp_{r['ndev']}dev_tok_s",
+                 int(r["tokens_per_s"]), f"eff={r['efficiency']}")
+    _csv("fig2b_wall_s", round(time.time() - t0, 1))
+
+    # -- tokenizer table ------------------------------------------------------
+    from . import tokenizer_throughput
+
+    t0 = time.time()
+    tk = tokenizer_throughput.run(n_docs=300 if args.fast else 1500)
+    _csv("tokenizer_serial_tok_s", tk["serial_tok_per_s"])
+    _csv("tokenizer_pipeline_tok_s", tk["pipeline_tok_per_s"],
+         f"speedup={tk['speedup']}x_on_{tk['host_cores']}core")
+    _csv("tokenizer_wall_s", round(time.time() - t0, 1))
+
+    # -- Fig 2a analog: convergence parity ------------------------------------
+    if not args.fast:
+        from . import fig2a_convergence
+
+        t0 = time.time()
+        f2a = fig2a_convergence.run(steps=25)
+        _csv("fig2a_max_plan_divergence", round(f2a["max_divergence"], 5),
+             "|".join(f2a["plans"]))
+        _csv("fig2a_converged", f2a["converged"])
+        _csv("fig2a_wall_s", round(time.time() - t0, 1))
+
+    # -- roofline table (from dry-run artifacts, if present) ------------------
+    try:
+        from . import roofline
+
+        rows = [roofline.fmt_row(r) for r in roofline.load("16x16")]
+        ok = [r for r in rows if r]
+        _csv("roofline_pairs_baselined", len(ok), "single-pod 16x16")
+        doms = {}
+        for r in ok:
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        _csv("roofline_dominant_histogram",
+             ";".join(f"{k}:{v}" for k, v in sorted(doms.items())))
+    except Exception as e:
+        _csv("roofline_pairs_baselined", 0, f"error:{type(e).__name__}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Paper Table (tokenization throughput): producer-consumer pipeline vs
+serial baseline, measured tokens/s on a synthetic JSONL corpus.
+
+The paper reports 31M tok/s on 2x64 cores and 7x over Megatron; this host has
+1 core, so the deliverable is the measured ratio + the architecture, not the
+absolute number."""
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+
+def make_corpus(path: str, n_docs: int = 1500, avg_words: int = 80, seed=0):
+    import json as _json
+
+    rng = np.random.default_rng(seed)
+    words = ["the", "quick", "brown", "fox", "jumps", "over", "lazy", "dog",
+             "pretraining", "framework", "tokenizer", "throughput", "scale"]
+    with open(path, "w") as f:
+        for _ in range(n_docs):
+            n = int(rng.integers(avg_words // 2, avg_words * 2))
+            f.write(_json.dumps({"text": " ".join(rng.choice(words, n))}) + "\n")
+
+
+def run(n_docs: int = 1500, n_workers: int = 2):
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.data.tokenize_pipeline import tokenize_file, tokenize_file_serial
+    from repro.data.tokenizer import ByteTokenizer
+
+    tmp = tempfile.mkdtemp(prefix="tok_bench_")
+    corpus = os.path.join(tmp, "corpus.jsonl")
+    make_corpus(corpus, n_docs=n_docs)
+    tok = ByteTokenizer()
+
+    t0 = time.time()
+    a = tokenize_file_serial(corpus, os.path.join(tmp, "ser"), tok)
+    t_serial = time.time() - t0
+
+    t0 = time.time()
+    b = tokenize_file(corpus, os.path.join(tmp, "par"), tok,
+                      n_workers=n_workers, batch_docs=64)
+    t_pipe = time.time() - t0
+
+    assert a["n_tokens"] == b["n_tokens"]
+    return {
+        "n_docs": n_docs,
+        "n_tokens": a["n_tokens"],
+        "serial_tok_per_s": int(a["n_tokens"] / t_serial),
+        "pipeline_tok_per_s": int(b["n_tokens"] / t_pipe),
+        "pipeline_workers": n_workers,
+        "speedup": round(t_serial / t_pipe, 2),
+        "host_cores": os.cpu_count(),
+        "note": "paper: 31M tok/s on 128 cores, 7x vs Megatron; this is a "
+                "1-core container — architecture identical, absolute "
+                "numbers are not comparable",
+    }
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=2))

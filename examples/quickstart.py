@@ -1,0 +1,27 @@
+"""Quickstart: the whole training setup is the YAML dependency graph next to
+this file; this script only resolves it and runs the gym (paper Fig. 1).
+
+  PYTHONPATH=src python examples/quickstart.py [steps]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import repro.core.components  # noqa: F401  (populates the component registry)
+from repro.config.resolver import resolve_yaml
+
+
+def main():
+    steps = int(sys.argv[1]) if len(sys.argv) > 1 else 60
+    cfg_path = os.path.join(os.path.dirname(__file__), "configs",
+                            "quickstart.yaml")
+    graph = resolve_yaml(cfg_path)
+    out = graph["gym"].run(steps=steps)
+    h = out["history"]
+    print(f"quickstart: loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f} "
+          f"over {steps} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""Built-in component catalog: registers every pluggable component with the
+default registry. Importing this module populates the registry; custom
+components can be added at runtime with the same API (no framework changes)."""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Optional
+
+from ..config.registry import DEFAULT_REGISTRY as REG
+from ..configs import ARCH_IDS, get_config, get_reduced, reduce_config
+from ..data.packed_dataset import ChunkedLMDataset, PackedDataset, ShardedLoader, synthetic_dataset
+from ..data.tokenizer import BpeTokenizer, ByteTokenizer
+from ..models import build_model
+from ..models.base import ArchConfig, MLAConfig, MoEConfig, SSMConfig, Model
+from ..optim import schedules as SCHED
+from ..optim.adamw import AdamW
+from ..sharding.plans import ShardingPlan, make_plan
+from . import interfaces as IF
+from .gym import Gym
+
+IF.register_builtin_interfaces()
+
+# virtual-subclass the concrete builtins into their IFs
+IF.OptimizerIF.register(AdamW)
+IF.TokenizerIF.register(ByteTokenizer)
+IF.TokenizerIF.register(BpeTokenizer)
+IF.DatasetIF.register(ChunkedLMDataset)
+IF.LoaderIF.register(ShardedLoader)
+
+_REGISTERED = False
+
+
+def _reg(component_key: str, variant_key: str, factory, interface=None):
+    REG.register(component_key, variant_key, factory, interface)
+
+
+def register_all() -> None:
+    global _REGISTERED
+    if _REGISTERED:
+        return
+    _REGISTERED = True
+
+    # -- arch configs -------------------------------------------------------
+    for arch in ARCH_IDS + ["llama3_8b"]:
+        _reg("arch_config", arch,
+             (lambda a: (lambda reduced=False, **overrides: _cfg(a, reduced, overrides)))(arch),
+             ArchConfig)
+    _reg("arch_config", "custom", _custom_cfg, ArchConfig)
+
+    # -- models -------------------------------------------------------------
+    _reg("model", "auto", lambda arch_config: build_model(arch_config), Model)
+
+    # -- optimizers / schedules ----------------------------------------------
+    _reg("optimizer", "adamw",
+         lambda lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+                grad_clip=1.0:
+         AdamW(lr=lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+               grad_clip=grad_clip),
+         IF.OptimizerIF)
+    _reg("lr_schedule", "constant", SCHED.constant)
+    _reg("lr_schedule", "warmup_cosine", SCHED.warmup_cosine)
+    _reg("lr_schedule", "wsd", SCHED.wsd)
+
+    # -- sharding plans -------------------------------------------------------
+    for name in ("ddp", "fsdp", "hsdp", "fsdp_tp", "hsdp_tp", "fsdp_tp_ep",
+                 "hsdp_tp_ep"):
+        _reg("sharding_plan", name,
+             (lambda n: (lambda multi_pod=False: make_plan(n, multi_pod)))(name),
+             ShardingPlan)
+
+    # -- meshes ----------------------------------------------------------------
+    _reg("mesh_provider", "single_device", lambda: None)
+    _reg("mesh_provider", "local", _local_mesh)
+    _reg("mesh_provider", "production", _production_mesh)
+
+    # -- tokenizers -----------------------------------------------------------
+    _reg("tokenizer", "byte", ByteTokenizer, IF.TokenizerIF)
+    _reg("tokenizer", "bpe",
+         lambda path="", n_merges=256: (BpeTokenizer.load(path) if path
+                                        else BpeTokenizer()),
+         IF.TokenizerIF)
+
+    # -- datasets / loaders ----------------------------------------------------
+    _reg("dataset", "packed_chunked",
+         lambda prefix, seq_len, seed=0, shuffle=True:
+         ChunkedLMDataset(PackedDataset(prefix), seq_len, seed, shuffle),
+         IF.DatasetIF)
+    _reg("dataset", "synthetic",
+         _synthetic_chunked,
+         IF.DatasetIF)
+    _reg("loader", "sharded",
+         lambda dataset, global_batch, dp_rank=0, dp_size=1:
+         ShardedLoader(dataset, global_batch, dp_rank, dp_size),
+         IF.LoaderIF)
+
+    # -- evaluators ---------------------------------------------------------------
+    from .evaluator import PerplexityEvaluator
+
+    _reg("evaluator", "perplexity",
+         lambda dataset, n_samples=16, offset=None, batch=4:
+         PerplexityEvaluator(dataset, n_samples, offset, batch))
+
+    # -- trackers ---------------------------------------------------------------
+    _reg("tracker", "stdout", lambda prefix="": _StdoutTracker(prefix),
+         IF.TrackerIF)
+    _reg("tracker", "jsonl", lambda path: _JsonlTracker(path), IF.TrackerIF)
+
+    # -- gym ---------------------------------------------------------------------
+    _reg("gym", "standard",
+         lambda model, optimizer, loader, mesh_provider=None, sharding_plan=None,
+                seed=0, grad_accum=1, log_every=10, eval_every=0, ckpt_every=0,
+                ckpt_dir="", tracker=None:
+         Gym(model=model, optimizer=optimizer, loader=loader,
+             mesh=(mesh_provider() if callable(mesh_provider) else mesh_provider),
+             plan=sharding_plan, seed=seed, grad_accum=grad_accum,
+             log_every=log_every, eval_every=eval_every, ckpt_every=ckpt_every,
+             ckpt_dir=ckpt_dir, logger=tracker),
+         Gym)
+
+
+# ---------------------------------------------------------------------------
+def _cfg(arch: str, reduced: bool, overrides: Dict[str, Any]) -> ArchConfig:
+    cfg = get_reduced(arch) if reduced else get_config(arch)
+    return cfg.with_(**overrides) if overrides else cfg
+
+
+def _custom_cfg(**kw) -> ArchConfig:
+    if isinstance(kw.get("moe"), dict):
+        kw["moe"] = MoEConfig(**kw["moe"])
+    if isinstance(kw.get("mla"), dict):
+        kw["mla"] = MLAConfig(**kw["mla"])
+    if isinstance(kw.get("ssm"), dict):
+        kw["ssm"] = SSMConfig(**kw["ssm"])
+    return ArchConfig(**kw)
+
+
+def _local_mesh(dp: int = 1, tp: int = 1):
+    from ..launch.mesh import make_local_mesh
+
+    return lambda: make_local_mesh(dp, tp)
+
+
+def _production_mesh(multi_pod: bool = False):
+    from ..launch.mesh import make_production_mesh
+
+    return lambda: make_production_mesh(multi_pod=multi_pod)
+
+
+def _synthetic_chunked(n_tokens: int, vocab: int, prefix: str, seq_len: int,
+                       seed: int = 0, shuffle: bool = True):
+    import os
+
+    if not os.path.exists(prefix + ".tokens.u32"):
+        synthetic_dataset(n_tokens, vocab, prefix, seed)
+    return ChunkedLMDataset(PackedDataset(prefix), seq_len, seed, shuffle)
+
+
+class _StdoutTracker(IF.TrackerIF):
+    def __init__(self, prefix: str = ""):
+        self.prefix = prefix
+
+    def __call__(self, metrics: Dict[str, Any]) -> None:
+        print(self.prefix + json.dumps(metrics, default=float), flush=True)
+
+
+class _JsonlTracker(IF.TrackerIF):
+    def __init__(self, path: str):
+        self.path = path
+
+    def __call__(self, metrics: Dict[str, Any]) -> None:
+        with open(self.path, "a") as f:
+            f.write(json.dumps(metrics, default=float) + "\n")
+
+
+register_all()

@@ -1,0 +1,39 @@
+"""Evaluation components (the paper's downstream-evaluation integration
+point): held-out perplexity over a dataset slice, pluggable into the gym's
+``eval_fn`` hook or runnable standalone."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..train.steps import compute_loss
+
+
+@dataclasses.dataclass
+class PerplexityEvaluator:
+    dataset: Any                 # ChunkedLMDataset-like
+    n_samples: int = 16
+    offset: Optional[int] = None  # default: tail of the dataset
+    batch: int = 4
+
+    def __call__(self, model, params) -> Dict[str, float]:
+        n = len(self.dataset)
+        start = self.offset if self.offset is not None else max(
+            0, n - self.n_samples)
+        losses = []
+        fn = jax.jit(lambda p, b: compute_loss(model, p, b)[0])
+        for lo in range(start, min(start + self.n_samples, n), self.batch):
+            xs, ys = [], []
+            for i in range(lo, min(lo + self.batch, n)):
+                x, y = self.dataset.sample(i)
+                xs.append(x)
+                ys.append(y)
+            batch = {"tokens": jnp.asarray(np.stack(xs)),
+                     "labels": jnp.asarray(np.stack(ys))}
+            losses.append(float(fn(params, batch)))
+        mean = float(np.mean(losses)) if losses else float("nan")
+        return {"loss": mean, "ppl": float(np.exp(mean))}

@@ -1,0 +1,108 @@
+"""The gym: a generic SPMD training driver (paper Fig. 1, right box).
+
+The resolved object graph — model, optimizer, sharding plan, loader,
+checkpointer, trackers — is injected; the gym only drives the loop. It owns
+no architecture- or strategy-specific logic (that's the whole point)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..models import base as B
+from ..optim.adamw import AdamW
+from ..sharding import plans as PL
+from ..train import steps as ST
+from ..train import checkpoint as CK
+
+
+@dataclasses.dataclass
+class Gym:
+    model: Any
+    optimizer: Any
+    loader: Any
+    mesh: Any = None                      # None => single device
+    plan: Any = None
+    seed: int = 0
+    grad_accum: int = 1
+    log_every: int = 10
+    eval_every: int = 0
+    ckpt_every: int = 0
+    ckpt_dir: str = ""
+    eval_fn: Optional[Callable] = None
+    logger: Optional[Callable[[Dict[str, Any]], None]] = None
+
+    def setup(self):
+        if self.mesh is not None and self.plan is not None:
+            mesh_ctx = PL.mesh_context(self.plan, self.mesh)
+            storage_axes = self.plan.ep_storage_axes if self.plan.ep else ()
+        else:
+            mesh_ctx, storage_axes = None, ()
+        self.mesh_ctx = mesh_ctx
+        step_fn = ST.make_train_step(
+            self.model, self.optimizer, mesh_ctx, storage_axes,
+            grad_accum=self.grad_accum,
+        )
+        if self.mesh is not None:
+            pshapes = jax.eval_shape(self.model.init, jax.random.PRNGKey(self.seed))
+            pspecs, self.shard_warnings = PL.param_shardings(
+                self.plan, self.mesh, pshapes, self.model.param_axes()
+            )
+            rep = jax.sharding.NamedSharding(self.mesh, jax.sharding.PartitionSpec())
+            state_sh = {
+                "params": pspecs,
+                "opt": {"m": pspecs, "v": pspecs, "count": rep},
+                "step": rep,
+            }
+            self._step = jax.jit(step_fn, in_shardings=(state_sh, None),
+                                 out_shardings=(state_sh, None),
+                                 donate_argnums=(0,))
+            with self.mesh:
+                state = jax.jit(
+                    lambda r: ST.init_train_state(self.model, self.optimizer, r),
+                    out_shardings=state_sh,
+                )(jax.random.PRNGKey(self.seed))
+        else:
+            self.shard_warnings = []
+            self._step = jax.jit(step_fn, donate_argnums=(0,))
+            state = ST.init_train_state(
+                self.model, self.optimizer, jax.random.PRNGKey(self.seed)
+            )
+        return state
+
+    def run(self, steps: int, state=None) -> Dict[str, Any]:
+        if state is None:
+            state = self.setup()
+        start = int(state["step"])
+        history: List[Dict[str, Any]] = []
+        t0 = time.time()
+        ctx = self.mesh if self.mesh is not None else _nullctx()
+        with ctx:
+            for i, batch in enumerate(self.loader.batches(steps, start_step=start)):
+                state, metrics = self._step(state, batch)
+                step = start + i + 1
+                if self.log_every and (step % self.log_every == 0 or i == 0):
+                    m = {k: float(v) for k, v in metrics.items()}
+                    m["step"] = step
+                    m["wall_s"] = round(time.time() - t0, 2)
+                    history.append(m)
+                    if self.logger:
+                        self.logger(m)
+                if self.eval_every and self.eval_fn and step % self.eval_every == 0:
+                    ev = self.eval_fn(self.model, state["params"])
+                    if self.logger:
+                        self.logger({"step": step, **{f"eval_{k}": v for k, v in ev.items()}})
+                if self.ckpt_every and self.ckpt_dir and step % self.ckpt_every == 0:
+                    CK.save_checkpoint(jax.device_get(state), self.ckpt_dir, step)
+        return {"state": state, "history": history}
+
+
+class _nullctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

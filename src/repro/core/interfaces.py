@@ -1,0 +1,85 @@
+"""The component interfaces (IFs) — the contracts the registry validates
+against (paper: "93 pluggable components each implementing one of the 32
+pre-defined interfaces").
+
+Most IFs are structural: a lightweight ABC or an existing concrete class.
+A new component only has to satisfy the IF to compose with everything else
+(checkpointing, evaluation, the gym) — the paper's central extensibility
+claim, demonstrated in tests/test_config_system.py with a custom model.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Callable, Dict
+
+from ..models.base import ArchConfig, Model
+from ..sharding.plans import ShardingPlan
+
+
+class OptimizerIF(abc.ABC):
+    @abc.abstractmethod
+    def init(self, params): ...
+
+    @abc.abstractmethod
+    def update(self, grads, state, params): ...
+
+
+class TokenizerIF(abc.ABC):
+    @abc.abstractmethod
+    def encode(self, text: str, bos: bool = False, eos: bool = False): ...
+
+    @abc.abstractmethod
+    def decode(self, ids): ...
+
+
+class DatasetIF(abc.ABC):
+    @abc.abstractmethod
+    def __len__(self): ...
+
+    @abc.abstractmethod
+    def sample(self, i: int): ...
+
+
+class LoaderIF(abc.ABC):
+    @abc.abstractmethod
+    def batches(self, steps: int, start_step: int = 0): ...
+
+
+class MeshProviderIF(abc.ABC):
+    @abc.abstractmethod
+    def build(self): ...
+
+
+class TrackerIF(abc.ABC):
+    """Metric sink (stdout/jsonl/...)."""
+
+    @abc.abstractmethod
+    def __call__(self, metrics: Dict[str, Any]) -> None: ...
+
+
+#: component_key -> interface. Plain classes act as structural IFs.
+INTERFACES: Dict[str, type] = {}
+
+
+def register_builtin_interfaces():
+    from ..core.gym import Gym
+    from ..models.base import Model as ModelIF
+
+    INTERFACES.update(
+        {
+            "model": ModelIF,
+            "arch_config": ArchConfig,
+            "optimizer": OptimizerIF,
+            "lr_schedule": object,       # callables: validated by signature
+            "sharding_plan": ShardingPlan,
+            "tokenizer": TokenizerIF,
+            "dataset": DatasetIF,
+            "loader": LoaderIF,
+            "mesh_provider": object,
+            "gym": Gym,
+            "tracker": TrackerIF,
+            "checkpointer": object,
+            "exporter": object,
+        }
+    )
+    return INTERFACES

@@ -1,0 +1,51 @@
+"""Hyperparameter / throughput search (paper §2: "hyperparameter search
+functionality for scalability / throughput optimization").
+
+Grid search over declarative config patches: each trial deep-patches the raw
+config dict, resolves a fresh object graph, runs a few steps, and reports
+loss + measured tokens/s. No framework code changes per trial — the paper's
+ablation workflow, automated.
+"""
+from __future__ import annotations
+
+import copy
+import itertools
+import time
+from typing import Any, Dict, Iterable, List, Tuple
+
+from ..config.resolver import resolve_config
+
+
+def _set_path(cfg: Dict[str, Any], path: str, value: Any) -> None:
+    keys = path.split(".")
+    node = cfg
+    for k in keys[:-1]:
+        node = node[k]
+    node[keys[-1]] = value
+
+
+def grid(raw_config: Dict[str, Any], space: Dict[str, Iterable[Any]],
+         steps: int = 10, gym_key: str = "gym") -> List[Dict[str, Any]]:
+    """space: {"optimizer.config.lr": [1e-3, 3e-4], "gym.config.grad_accum": [1, 2]}"""
+    names = list(space)
+    results = []
+    for values in itertools.product(*(space[n] for n in names)):
+        raw = copy.deepcopy(raw_config)
+        for n, v in zip(names, values):
+            _set_path(raw, n, v)
+        graph = resolve_config(raw)
+        gym = graph[gym_key]
+        t0 = time.time()
+        out = gym.run(steps=steps)
+        wall = time.time() - t0
+        hist = out["history"]
+        loader = gym.loader
+        tokens = steps * loader.global_batch * loader.dataset.seq_len
+        results.append({
+            "trial": dict(zip(names, values)),
+            "final_loss": hist[-1]["loss"],
+            "tokens_per_s": int(tokens / wall),
+            "wall_s": round(wall, 2),
+        })
+    results.sort(key=lambda r: r["final_loss"])
+    return results

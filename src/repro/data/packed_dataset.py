@@ -1,0 +1,101 @@
+"""Memory-mapped packed token datasets (paper §Data Pipeline, stage 3):
+O(1) random access to tokenized documents, fixed-length chunking for
+training, and global shuffling."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+from .tokenize_pipeline import DOCIDX_SUFFIX, TOKENS_SUFFIX
+
+
+class PackedDataset:
+    """Token stream + document index, both memory-mapped."""
+
+    def __init__(self, prefix: str):
+        self.tokens = np.memmap(prefix + TOKENS_SUFFIX, dtype=np.uint32, mode="r")
+        self.docidx = np.load(prefix + DOCIDX_SUFFIX, mmap_mode="r")
+
+    @property
+    def n_docs(self) -> int:
+        return len(self.docidx) - 1
+
+    @property
+    def n_tokens(self) -> int:
+        return int(self.docidx[-1])
+
+    def document(self, i: int) -> np.ndarray:
+        """O(1) random access to tokenized document i."""
+        lo, hi = int(self.docidx[i]), int(self.docidx[i + 1])
+        return np.asarray(self.tokens[lo:hi])
+
+
+@dataclasses.dataclass
+class ChunkedLMDataset:
+    """Fixed seq_len chunks over the packed stream, globally shuffled."""
+
+    dataset: PackedDataset
+    seq_len: int
+    seed: int = 0
+    shuffle: bool = True
+
+    def __post_init__(self):
+        self.n_samples = self.dataset.n_tokens // (self.seq_len + 1)
+        self.order = np.arange(self.n_samples)
+        if self.shuffle:
+            np.random.default_rng(self.seed).shuffle(self.order)
+
+    def __len__(self) -> int:
+        return self.n_samples
+
+    def sample(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        k = int(self.order[i % max(self.n_samples, 1)])
+        w = self.seq_len + 1
+        chunk = np.asarray(self.dataset.tokens[k * w : (k + 1) * w], dtype=np.int32)
+        return chunk[:-1], chunk[1:]
+
+
+@dataclasses.dataclass
+class ShardedLoader:
+    """Deterministic data-parallel loader: rank r of n reads samples
+    i*n + r (the Modalities DP-sharded sampler analog)."""
+
+    dataset: ChunkedLMDataset
+    global_batch: int
+    dp_rank: int = 0
+    dp_size: int = 1
+
+    def __post_init__(self):
+        assert self.global_batch % self.dp_size == 0
+        self.local_batch = self.global_batch // self.dp_size
+
+    def batches(self, steps: int, start_step: int = 0) -> Iterator[dict]:
+        for step in range(start_step, start_step + steps):
+            base = step * self.global_batch
+            toks, labs = [], []
+            for j in range(self.local_batch):
+                idx = base + self.dp_rank * self.local_batch + j
+                x, y = self.dataset.sample(idx)
+                toks.append(x)
+                labs.append(y)
+            yield {
+                "tokens": np.stack(toks),
+                "labels": np.stack(labs),
+            }
+
+
+def synthetic_dataset(n_tokens: int, vocab: int, prefix: str, seed: int = 0,
+                      avg_doc_len: int = 512):
+    """Write a synthetic packed dataset (tests / examples without a corpus)."""
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(3, vocab, size=n_tokens, dtype=np.uint32)
+    toks.tofile(prefix + TOKENS_SUFFIX)
+    bounds = [0]
+    pos = 0
+    while pos < n_tokens:
+        pos = min(n_tokens, pos + int(rng.integers(avg_doc_len // 2, avg_doc_len * 2)))
+        bounds.append(pos)
+    np.save(prefix + DOCIDX_SUFFIX, np.asarray(bounds, dtype=np.int64))
+    return PackedDataset(prefix)

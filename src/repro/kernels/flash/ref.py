@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q [B, Sq, H, dh]; k/v [B, Skv, K, dh] (GQA: H = K·G). fp32 softmax."""
+    B, Sq, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, dh).astype(jnp.float32) / math.sqrt(dh)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
+    pos_q = jnp.arange(Sq)[:, None]
+    pos_k = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask = mask & (pos_q >= pos_k)
+    if window > 0:
+        mask = mask & (pos_q - pos_k < window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, dh).astype(q.dtype)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the SSD kernel: the chunked scan from models/ssm.py
+(itself validated against the step-by-step recurrence in tests)."""
+from __future__ import annotations
+
+from ...models.ssm import ssd_chunked
+
+
+def ssd_ref(x, dt, A, Bm, Cm, D_skip, *, chunk: int = 128):
+    y, _ = ssd_chunked(x, dt, A, Bm, Cm, D_skip, chunk=chunk)
+    return y
+
+
+def ssd_recurrence_ref(x, dt, A, Bm, Cm, D_skip):
+    """O(S) sequential recurrence — the ground-truth definition."""
+    import jax
+    import jax.numpy as jnp
+
+    Bq, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+
+    def step(h, inp):
+        xs, dts, bs, cs = inp          # [B,H,P], [B,H], [B,G,N] x2
+        bh = jnp.repeat(bs, rep, axis=1)
+        ch = jnp.repeat(cs, rep, axis=1)
+        dA = jnp.exp(dts * A)          # [B,H]
+        h = h * dA[..., None, None] + jnp.einsum(
+            "bhn,bhp,bh->bhpn", bh, xs, dts
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", h, ch) + D_skip[None, :, None] * xs
+        return h, y
+
+    h0 = jnp.zeros((Bq, H, P, N), jnp.float32)
+    xs = x.transpose(1, 0, 2, 3).astype(jnp.float32)
+    dts = dt.transpose(1, 0, 2).astype(jnp.float32)
+    bs = Bm.transpose(1, 0, 2, 3).astype(jnp.float32)
+    cs = Cm.transpose(1, 0, 2, 3).astype(jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (xs, dts, bs, cs))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

@@ -1,0 +1,245 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination on placeholder devices; emit memory / cost / collective analysis
+for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-1.6b \
+      --shape train_4k [--multi-pod] [--plan fsdp_tp] [--json out.json]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..configs.shapes import SHAPES
+from ..models import build_model
+from ..optim.adamw import AdamW
+from ..sharding import plans as PL
+from ..train import steps as ST
+from . import mesh as MESH
+from . import specs as SP
+
+
+from .hlo_analysis import analyze as analyze_hlo
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D (training) or 2·N_active·D (per-token inference)."""
+    from ..models import count_params
+    from ..models import build_model as _bm
+
+    import math
+
+    model = _bm(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    n_total = sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(params))
+    n_active = n_total
+    if cfg.moe:
+        # subtract inactive routed experts
+        per_layer_routed = 3 * cfg.d_model * cfg.moe.d_expert * cfg.moe.n_routed
+        n_moe_layers = cfg.n_layers - cfg.moe.n_dense_layers
+        active_frac = cfg.moe.top_k / cfg.moe.n_routed
+        n_active = n_total - int(
+            per_layer_routed * n_moe_layers * (1 - active_frac)
+        )
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens, n_total, n_active
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens, n_total, n_active
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n_active * tokens, n_total, n_active
+
+
+# ---------------------------------------------------------------------------
+# the dry run
+# ---------------------------------------------------------------------------
+def dryrun(arch: str, shape_name: str, multi_pod: bool = False,
+           plan_name: str = "", scan_block: int = 0,
+           verbose: bool = True, mesh_split: str = "",
+           mla_absorb: bool = False, grad_accum: int = 1,
+           serve_bf16: bool = False, bf16_params: bool = False) -> Dict[str, Any]:
+    shape = SHAPES[shape_name]
+    cfg = SP.adapt_config(get_config(arch), shape)
+    if scan_block:
+        cfg = cfg.with_(scan_block_size=scan_block)
+    if mla_absorb:
+        cfg = cfg.with_(mla_absorb=True)
+    ok, why = SP.supports_shape(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+
+    if mesh_split:  # e.g. "32x8": re-split the same 256 chips (perf tuning)
+        import numpy as np
+
+        dp, tp = (int(x) for x in mesh_split.split("x"))
+        assert dp * tp == 256 and not multi_pod
+        mesh = jax.sharding.Mesh(
+            np.asarray(jax.devices()[: dp * tp]).reshape(dp, tp),
+            ("data", "model"),
+        )
+    else:
+        mesh = MESH.make_production_mesh(multi_pod=multi_pod)
+    plan = (PL.make_plan(plan_name, multi_pod) if plan_name
+            else PL.default_plan_for(cfg, multi_pod))
+    mesh_ctx = PL.mesh_context(plan, mesh)
+    storage_axes = plan.ep_storage_axes if plan.ep else ()
+    model = build_model(cfg)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt = AdamW(lr=3e-4, master_weights=bf16_params)
+        state_shapes = ST.abstract_train_state(
+            model, opt, param_dtype=jnp.bfloat16 if bf16_params else None)
+        pspecs, warnings = PL.param_shardings(
+            plan, mesh, state_shapes["params"], model.param_axes()
+        )
+        rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        state_sh = {
+            "params": pspecs,
+            "opt": ST.opt_state_shardings(state_shapes["opt"], pspecs, rep),
+            "step": rep,
+        }
+        ins = SP.input_specs(cfg, shape)
+        batch_sh = PL.batch_shardings(plan, mesh, ins["batch"])
+        step_fn = ST.make_train_step(model, opt, mesh_ctx, storage_axes,
+                                     grad_accum=grad_accum)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(state_sh, batch_sh),
+            donate_argnums=(0,),
+        )
+        with mesh:
+            lowered = jitted.lower(state_shapes, ins["batch"])
+    elif shape.kind == "prefill":
+        pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        pspecs, warnings = PL.param_shardings(plan, mesh, pshapes, model.param_axes())
+        ins = SP.input_specs(cfg, shape)
+        batch_sh = PL.batch_shardings(plan, mesh, ins["batch"])
+        step_fn = ST.make_prefill_step(model, mesh_ctx, storage_axes)
+        jitted = jax.jit(step_fn, in_shardings=(pspecs, batch_sh))
+        with mesh:
+            lowered = jitted.lower(pshapes, ins["batch"])
+    else:  # decode
+        pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        if serve_bf16:  # serving keeps weights in bf16 (no f32 master needed)
+            pshapes = jax.tree_util.tree_map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16)
+                if l.dtype == jnp.float32 else l, pshapes)
+        pspecs, warnings = PL.param_shardings(plan, mesh, pshapes, model.param_axes())
+        ins = SP.input_specs(cfg, shape, model=model)
+        cache_sh = PL.cache_shardings(plan, mesh, ins["cache"], shape.global_batch)
+        tok_sh = PL.batch_shardings(
+            plan, mesh, {"tokens": ins["tokens"], "positions": ins["positions"]}
+        )
+        step_fn = ST.make_serve_step(model, mesh_ctx)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(pspecs, cache_sh, tok_sh["tokens"], tok_sh["positions"]),
+            donate_argnums=(1,),
+        )
+        with mesh:
+            lowered = jitted.lower(pshapes, ins["cache"], ins["tokens"],
+                                   ins["positions"])
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        mem = None
+    hlo = compiled.as_text()
+    ana = analyze_hlo(hlo)
+    mflops, n_total, n_active = model_flops(cfg, shape)
+
+    chips = mesh.devices.size
+    flops_dev = float(ana["flops"])
+    bytes_dev = float(ana["bytes"])
+    res = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "plan": plan.describe(),
+        "chips": int(chips),
+        "hlo_flops_per_dev": flops_dev,
+        "hlo_bytes_per_dev": bytes_dev,
+        "collective_bytes_per_dev": ana["collective_bytes"],
+        "collective_counts": ana["collective_counts"],
+        "collective_per_kind": ana["collective_per_kind"],
+        "collective_msgs_large": sorted(
+            ana["messages"], key=lambda m: -m[1]
+        )[:8],
+        "xla_cost_flops_unscaled": float(cost.get("flops", 0.0)),
+        "model_flops_global": mflops,
+        "n_params": n_total,
+        "n_params_active": n_active,
+        "compute_term_s": flops_dev / MESH.PEAK_FLOPS_BF16,
+        "memory_term_s": bytes_dev / MESH.HBM_BW,
+        "collective_term_s": ana["collective_bytes"] / MESH.ICI_BW,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "sharding_warnings": warnings,
+    }
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            try:
+                res[f"mem_{attr}"] = int(getattr(mem, attr))
+            except Exception:
+                pass
+    terms = {
+        "compute": res["compute_term_s"],
+        "memory": res["memory_term_s"],
+        "collective": res["collective_term_s"],
+    }
+    res["dominant_term"] = max(terms, key=terms.get)
+    res["useful_flops_ratio"] = (
+        mflops / (flops_dev * chips) if flops_dev else 0.0
+    )
+    if verbose:
+        print(json.dumps(res, indent=2, default=str))
+        if mem is not None:
+            print("memory_analysis:", mem)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--plan", default="")
+    ap.add_argument("--scan-block", type=int, default=0)
+    ap.add_argument("--mesh-split", default="")
+    ap.add_argument("--mla-absorb", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--serve-bf16", action="store_true")
+    ap.add_argument("--bf16-params", action="store_true")
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+    res = dryrun(args.arch, args.shape, args.multi_pod, args.plan,
+                 args.scan_block, mesh_split=args.mesh_split,
+                 mla_absorb=args.mla_absorb, grad_accum=args.grad_accum,
+                 serve_bf16=args.serve_bf16, bf16_params=args.bf16_params)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2, default=str)
+    return 0 if ("skipped" in res or res.get("chips")) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

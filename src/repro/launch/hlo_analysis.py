@@ -1,0 +1,284 @@
+"""Trip-count-aware static cost analysis over compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which silently
+drops ~L× of the FLOPs/bytes/collectives in a scan-over-layers program. The
+XLA CPU pipeline annotates every while with ``known_trip_count`` — we walk the
+call graph multiplying by trip counts and produce roofline-grade totals:
+
+* flops        — 2·M·N·K for every ``dot`` (+1/elem for a basic elementwise set)
+* bytes        — operand + output bytes of every top-level instruction
+                 (fusion internals excluded, matching HloCostAnalysis)
+* collectives  — bytes by kind (all-reduce counted 2x: ring RS+AG), with
+                 per-message sizes for the Fig-2c latency analysis
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1,
+                "u8": 1, "pred": 1, "token": 0, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"(%s)\[([\d,]*)\]" % "|".join(_DTYPE_BYTES))
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# elementwise/transcendental ops counted at 1 flop per output element
+_EW_OPS = {"add", "subtract", "multiply", "divide", "exponential", "tanh",
+           "rsqrt", "sqrt", "log", "power", "maximum", "minimum", "compare",
+           "select", "negate", "abs", "floor", "convert", "cosine", "sine",
+           "logistic", "reduce", "reduce-window"}
+
+# pure bookkeeping/aliasing ops: no HBM traffic of their own
+_NO_TRAFFIC = {"get-tuple-element", "tuple", "parameter", "bitcast",
+               "constant", "while", "partition-id", "replica-id",
+               "after-all", "domain", "conditional", "call", "custom-call",
+               "async-start", "async-done", "opt-barrier"}
+
+
+def _shapes_in(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _shapes_in(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    result_text: str            # type portion left of the op
+    line: str
+    operands: List[str]
+
+    @property
+    def out_bytes(self) -> int:
+        return _shape_bytes(self.result_text)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]      # local symbol -> type text
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(%[\w.\-]+|ROOT\s+%[\w.\-]+)\s*=\s*(.*?)\s([a-z][\w\-]*)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR_RE = re.compile(
+    r"(?:body|calls|to_apply|called_computations=\{)\s*=?\s*(%[\w.\-]+)"
+)
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = ""
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1), [], {})
+                if line.strip().startswith("ENTRY"):
+                    entry = m.group(1)
+                # record parameter shapes from the header
+                for pm in re.finditer(r"(%?[\w.\-]+):\s*([^,)]+)", line):
+                    cur.shapes["%" + pm.group(1).lstrip("%")] = pm.group(2)
+            continue
+        if s == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name = m.group(1).replace("ROOT", "").strip()
+        result_text, op, rest = m.group(2), m.group(3), m.group(4)
+        # operands: %names inside the top-level parens (up to matching close)
+        depth = 1
+        arg_text = []
+        for ch in rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            arg_text.append(ch)
+        arg_text = "".join(arg_text)
+        operands = re.findall(r"%[\w.\-]+", arg_text)
+        inst = Instr(name, op, result_text, line, operands)
+        cur.shapes[name] = result_text
+        cur.instrs.append(inst)
+    return comps, entry
+
+
+def _dot_flops(inst: Instr, comp: Computation, global_shapes) -> float:
+    out_elems = 0
+    for dt, dims in _shapes_in(inst.result_text):
+        n = 1
+        for d in dims:
+            n *= d
+        out_elems += n
+    # contraction size from lhs operand shape
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.line)
+    contract = 1
+    if m and inst.operands:
+        lhs = inst.operands[0]
+        ltext = comp.shapes.get(lhs) or global_shapes.get(lhs, "")
+        shapes = _shapes_in(ltext)
+        if shapes:
+            dims = shapes[0][1]
+            for idx in (int(i) for i in m.group(1).split(",") if i):
+                if idx < len(dims):
+                    contract *= dims[idx]
+    return 2.0 * out_elems * contract
+
+
+def _is_inplace_update(inst: Instr) -> bool:
+    if inst.op == "dynamic-update-slice":
+        return True
+    if inst.op == "fusion" and ("dynamic-update-slice" in inst.line
+                                or "dynamic_update_slice" in inst.line):
+        return True
+    return False
+
+
+def _is_slice_read(inst: Instr, slice_comps=frozenset()) -> bool:
+    """Fused dynamic-slice/gather reads touch only the slice, not the whole
+    operand (e.g. per-layer weight slices from the stacked [L, ...] carry)."""
+    if inst.op in ("dynamic-slice", "gather"):
+        return True
+    if inst.op == "fusion":
+        if ("dynamic_slice" in inst.line or "dynamic-slice" in inst.line
+                or "gather(" in inst.line):
+            return True
+        for cal, _ in _callees(inst):
+            if cal in slice_comps:
+                return True
+    return False
+
+
+def _callees(inst: Instr) -> List[Tuple[str, float]]:
+    out: List[Tuple[str, float]] = []
+    if inst.op == "while":
+        trip = _TRIP_RE.search(inst.line)
+        n = float(trip.group(1)) if trip else 1.0
+        body = re.search(r"body=(%[\w.\-]+)", inst.line)
+        if body:
+            out.append((body.group(1), n))
+        cond = re.search(r"condition=(%[\w.\-]+)", inst.line)
+        if cond:
+            out.append((cond.group(1), n))
+    elif inst.op in ("fusion", "call", "custom-call", "map", "conditional",
+                     "async-start"):
+        for mm in re.finditer(
+            r"(?:calls=|called_computations=\{)(%[\w.\-]+)", inst.line
+        ):
+            out.append((mm.group(1), 1.0))
+    return out
+
+
+def analyze(hlo: str) -> Dict[str, Any]:
+    import math
+
+    comps, entry = parse_module(hlo)
+    global_shapes: Dict[str, str] = {}
+    for c in comps.values():
+        global_shapes.update(c.shapes)
+
+    acc = {
+        "flops": 0.0,
+        "bytes": 0.0,
+        "coll": {k: 0.0 for k in _COLL_KINDS},
+        "coll_counts": {k: 0 for k in _COLL_KINDS},
+        "messages": [],
+    }
+    fusion_internal = set()
+    for c in comps.values():
+        for inst in c.instrs:
+            if inst.op in ("fusion", "map", "custom-call", "async-start"):
+                for cal, _ in _callees(inst):
+                    fusion_internal.add(cal)
+    # computations that slice a big buffer (fused per-layer weight reads)
+    slice_comps = frozenset(
+        c.name for c in comps.values()
+        if any(i.op in ("dynamic-slice", "gather") for i in c.instrs)
+    )
+
+    # Fusion-internal computations are register-resident: their elementwise
+    # ops and "bytes" are not separate HBM traffic, so the walk does not
+    # descend into them (matching HloCostAnalysis). XLA CPU post-opt fusions
+    # contain no dots or collectives, so no compute is lost.
+    def walk_main(cname: str, m: float, depth: int = 0) -> None:
+        comp = comps.get(cname)
+        if comp is None or depth > 12:
+            return
+        for inst in comp.instrs:
+            if inst.op == "dot":
+                acc["flops"] += m * _dot_flops(inst, comp, global_shapes)
+            elif inst.op in _EW_OPS:
+                acc["flops"] += m * sum(
+                    math.prod(dims) for _, dims in _shapes_in(inst.result_text)
+                )
+            ob = inst.out_bytes
+            operand_bytes = []
+            for o in inst.operands:
+                t = comp.shapes.get(o) or global_shapes.get(o, "")
+                operand_bytes.append(_shape_bytes(t))
+            ib = sum(operand_bytes)
+            if inst.op not in _NO_TRAFFIC:
+                if _is_inplace_update(inst) and operand_bytes:
+                    # dynamic-update-slice (in-place on TPU with donated
+                    # buffers): traffic = read+write of the update slice,
+                    # not the full buffer (which aliases the output).
+                    big = max(operand_bytes)
+                    acc["bytes"] += m * 2 * (ib - big)
+                elif (_is_slice_read(inst, slice_comps) and operand_bytes
+                      and ob < max(operand_bytes)):
+                    # sliced read: touch output-sized bytes of the big
+                    # operand + the small operands, not the whole buffer
+                    big = max(operand_bytes)
+                    acc["bytes"] += m * (2 * ob + (ib - big))
+                else:
+                    acc["bytes"] += m * (ob + ib)
+            base = inst.op.replace("-start", "")
+            if base in _COLL_KINDS and not inst.op.endswith("-done"):
+                nbytes = ob if base != "reduce-scatter" else ib
+                factor = 2.0 if base == "all-reduce" else 1.0
+                acc["coll"][base] += m * nbytes * factor
+                acc["coll_counts"][base] += int(m)
+                acc["messages"].append((base, nbytes, m))
+            for cal, k in _callees(inst):
+                if cal in fusion_internal and inst.op != "while":
+                    continue  # register-resident internals
+                walk_main(cal, m * k, depth + 1)
+
+    walk_main(entry, 1.0)
+    return {
+        "flops": acc["flops"],
+        "bytes": acc["bytes"],
+        "collective_bytes": sum(acc["coll"].values()),
+        "collective_per_kind": acc["coll"],
+        "collective_counts": acc["coll_counts"],
+        "messages": acc["messages"],
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,43 @@
+"""Production mesh definitions (TPU v5e pods).
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (device count is locked at first jax init).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devices)} "
+            "(dryrun.py sets XLA_FLAGS=--xla_force_host_platform_device_count=512)"
+        )
+    import numpy as np
+
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_local_mesh(dp: int = 1, tp: int = 1):
+    """Small mesh over whatever devices exist (tests / smoke runs)."""
+    import numpy as np
+
+    n = dp * tp
+    devices = jax.devices()
+    assert len(devices) >= n, f"need {n} devices, have {len(devices)}"
+    dev = np.asarray(devices[:n]).reshape((dp, tp))
+    return jax.sharding.Mesh(dev, ("data", "model"))
+
+
+# Hardware constants: TPU v5e
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (effective, one link)

@@ -1,0 +1,62 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Communication tracing (the paper's "kernel / NCCL communication tracing"
+analog): dump the compiled collective schedule for any (arch × shape × mesh)
+— kind, per-device message bytes, execution count, and the α–β time estimate.
+
+  PYTHONPATH=src python -m repro.launch.trace --arch granite-34b --shape train_4k
+"""
+import argparse
+import math
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--plan", default="")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    import repro.launch.dryrun as DR
+
+    cap = {}
+    orig = DR.analyze_hlo
+
+    def grab(hlo):
+        res = orig(hlo)
+        cap["messages"] = res["messages"]
+        return res
+
+    DR.analyze_hlo = grab
+    r = DR.dryrun(args.arch, args.shape, multi_pod=args.multi_pod,
+                  plan_name=args.plan, verbose=False)
+    if "skipped" in r:
+        print("skipped:", r["skipped"])
+        return 0
+    ALPHA, BW = 1e-6, 50e9
+    n = r["chips"]
+    print(f"# collective schedule: {args.arch} x {args.shape} x {r['mesh']} "
+          f"({r['plan']})")
+    print(f"{'kind':20s} {'msg bytes':>14s} {'count':>7s} "
+          f"{'total bytes':>14s} {'t_est (ms)':>11s}")
+    agg = {}
+    for kind, nbytes, mult in cap["messages"]:
+        key = (kind, nbytes)
+        agg[key] = agg.get(key, 0) + mult
+    rows = sorted(agg.items(), key=lambda kv: -(kv[0][1] * kv[1]))
+    for (kind, nbytes), count in rows[: args.top]:
+        t = count * (ALPHA * math.log2(max(n, 2)) + nbytes / BW) * 1e3
+        print(f"{kind:20s} {nbytes:14,d} {int(count):7d} "
+              f"{int(nbytes * count):14,d} {t:11.3f}")
+    print(f"\ntotal collective bytes/device: "
+          f"{r['collective_bytes_per_dev']:.3e}  "
+          f"(term {r['collective_term_s']:.3f}s at {BW/1e9:.0f} GB/s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,19 @@
+from .base import (
+    ArchConfig,
+    MeshContext,
+    MLAConfig,
+    Model,
+    MoEConfig,
+    SSMConfig,
+    count_params,
+)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.arch_type == "audio":
+        from .encdec import EncDecLM
+
+        return EncDecLM(cfg)
+    from .transformer import DecoderLM
+
+    return DecoderLM(cfg)

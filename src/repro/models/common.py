@@ -1,0 +1,125 @@
+"""Shared building blocks: norms, rotary embeddings, parameter init."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def dense_init(rng, shape, in_axis_size: Optional[int] = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (matches common LLM pretraining setups)."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(rng, -3.0, 3.0, shape, dtype) * std).astype(dtype)
+
+
+def embed_init(rng, shape, dtype=jnp.float32):
+    return (jax.random.normal(rng, shape, dtype) * 0.02).astype(dtype)
+
+
+def split_rngs(rng, n):
+    return list(jax.random.split(rng, n))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x, weight, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layernorm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = out * weight.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def norm_params(cfg, rng=None):
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+    return {
+        "scale": jnp.ones((cfg.d_model,), jnp.float32),
+        "bias": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm_type == "rmsnorm":
+        return rmsnorm(x, p["scale"], cfg.norm_eps)
+    return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+
+
+def norm_axes(cfg):
+    from . import base as B
+
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": (B.D_MODEL,)}
+    return {"scale": (B.D_MODEL,), "bias": (B.D_MODEL,)}
+
+
+# ---------------------------------------------------------------------------
+# rotary
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, dh]; positions: [..., S] absolute positions."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, dh/2]
+    cos = jnp.cos(angles)[..., None, :]                 # [..., S, 1, dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def sharded_cross_entropy(logits, labels, mask=None):
+    """Mean token NLL, SPMD-friendly over a vocab-sharded logits tensor.
+
+    Uses a one-hot einsum for the gold logit (partial-sums + psum under SPMD)
+    instead of take_along_axis (which would all-gather the logits).
+    """
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    gold = jnp.einsum("bsv,bsv->bs", lf, onehot)
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """Mean token NLL in fp32. logits [B,S,V], labels [B,S], mask [B,S]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,40 @@
+"""Dense MLP blocks (gated-SiLU / GELU)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import base as B
+from .common import act_fn, dense_init
+
+
+def init_mlp(cfg: B.ArchConfig, rng, d_ff: int = 0) -> Dict[str, Any]:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    r1, r2, r3 = jax.random.split(rng, 3)
+    p = {
+        "w_up": dense_init(r1, (D, F), D),
+        "w_down": dense_init(r2, (F, D), F),
+    }
+    if cfg.act == "silu":  # gated
+        p["w_gate"] = dense_init(r3, (D, F), D)
+    return p
+
+
+def mlp_axes(cfg: B.ArchConfig) -> Dict[str, Any]:
+    p = {"w_up": (B.D_MODEL, B.D_FF), "w_down": (B.D_FF, B.D_MODEL)}
+    if cfg.act == "silu":
+        p["w_gate"] = (B.D_MODEL, B.D_FF)
+    return p
+
+
+def mlp_forward(cfg: B.ArchConfig, p, x):
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    if cfg.act == "silu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = act_fn(cfg.act)(up)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))

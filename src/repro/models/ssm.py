@@ -1,0 +1,214 @@
+"""Mamba2 (SSD — state-space duality) blocks: chunked train scan + O(1) decode.
+
+Training uses the chunked SSD algorithm: a `lax.scan` over chunks carries the
+inter-chunk state [B,H,P,N]; within a chunk the quadratic dual form runs on
+the MXU (this inner body is what kernels/ssd tiles in Pallas). Decode is the
+plain recurrence on a persistent (conv, ssm) state — no KV cache, O(1) in
+context length. [arXiv:2405.21060]
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import base as B
+from .common import dense_init, rmsnorm
+
+
+def ssm_dims(cfg: B.ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, H, conv_dim
+
+
+def init_ssm(cfg: B.ArchConfig, rng) -> Dict[str, Any]:
+    s = cfg.ssm
+    D = cfg.d_model
+    d_inner, H, conv_dim = ssm_dims(cfg)
+    proj_out = 2 * d_inner + 2 * s.n_groups * s.d_state + H
+    r = jax.random.split(rng, 4)
+    return {
+        "in_proj": dense_init(r[0], (D, proj_out), D),
+        "conv_w": dense_init(r[1], (s.d_conv, conv_dim), s.d_conv),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(
+            jax.random.uniform(r[2], (H,), jnp.float32, minval=1.0, maxval=16.0)
+        ),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.exp(
+                jax.random.uniform(r[3], (H,), jnp.float32, minval=1e-3, maxval=0.1)
+            )
+            - 1.0
+        ),
+        "norm": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(rng, (d_inner, D), d_inner),
+    }
+
+
+def ssm_axes(cfg: B.ArchConfig) -> Dict[str, Any]:
+    return {
+        "in_proj": (B.D_MODEL, B.D_INNER),
+        "conv_w": (None, B.CONV_DIM),
+        "conv_b": (B.CONV_DIM,),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": (B.D_INNER,),
+        "out_proj": (B.D_INNER, B.D_MODEL),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    d_inner, H, _ = ssm_dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, x, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + gn, 2 * d_inner + 2 * gn], axis=-1
+    )
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x [B,S,C], w [W,C]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(W))
+    return out + b.astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D_skip, chunk: int, h0=None, use_kernel: bool = False):
+    """Chunked SSD scan.
+
+    x [B,S,H,P]; dt [B,S,H] (post-softplus); A [H] (negative); Bm/Cm [B,S,G,N];
+    D_skip [H]. Returns (y [B,S,H,P], final state [B,H,P,N]).
+    """
+    Bq, S, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = chunk
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+    nc = S // Q
+    rep = H // G
+
+    xc = x.reshape(Bq, nc, Q, H, Pd).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(Bq, nc, Q, H).transpose(1, 0, 2, 3)
+    Bc = Bm.reshape(Bq, nc, Q, G, N).transpose(1, 0, 2, 3, 4)
+    Cc = Cm.reshape(Bq, nc, Q, G, N).transpose(1, 0, 2, 3, 4)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bq, H, Pd, N), jnp.float32)
+
+    def chunk_step(h, blk):
+        xq, dtq, Bq_, Cq = blk          # [B,Q,H,P], [B,Q,H], [B,Q,G,N] x2
+        a = dtq.astype(jnp.float32) * A  # [B,Q,H] log-decay per step
+        Sa = jnp.cumsum(a, axis=1)       # [B,Q,H] inclusive
+        # intra-chunk dual (quadratic) form
+        CB = jnp.einsum(
+            "bigr,bjgr->bgij", Cq.astype(jnp.float32), Bq_.astype(jnp.float32)
+        )  # [B,G,Q,Q]
+        rel = Sa[:, :, None, :] - Sa[:, None, :, :]          # [B,Q(i),Q(j),H]
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        Lmat = jnp.where(causal[None, :, :, None], jnp.exp(rel), 0.0)  # [B,i,j,H]
+        CBh = jnp.repeat(CB, rep, axis=1)                    # [B,H,Q,Q]
+        M = CBh.transpose(0, 2, 3, 1) * Lmat * dtq.astype(jnp.float32)[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", M, xq.astype(jnp.float32))
+        # inter-chunk contribution from carried state
+        Ch = jnp.repeat(Cq, rep, axis=2)                     # [B,Q,H,N]
+        y_inter = jnp.einsum(
+            "bihn,bhpn->bihp", Ch.astype(jnp.float32) * jnp.exp(Sa)[..., None], h
+        )
+        y = y_intra + y_inter + D_skip[None, None, :, None] * xq.astype(jnp.float32)
+        # state update: h' = exp(S_Q) h + sum_j exp(S_Q - S_j) B_j (dt_j x_j)
+        decay_out = jnp.exp(Sa[:, -1:, :] - Sa)              # [B,Q,H]
+        Bh = jnp.repeat(Bq_, rep, axis=2)                    # [B,Q,H,N]
+        dBx = jnp.einsum(
+            "bjhn,bjhp->bhpn",
+            Bh.astype(jnp.float32) * (decay_out * dtq.astype(jnp.float32))[..., None],
+            xq.astype(jnp.float32),
+        )
+        h_new = jnp.exp(Sa[:, -1, :])[:, :, None, None] * h + dBx
+        return h_new, y.astype(x.dtype)
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bq, S, H, Pd)
+    return y, h_final
+
+
+def ssm_forward(cfg: B.ArchConfig, p, x, return_state: bool = False):
+    """Full Mamba2 block body (post-norm residual handled by caller).
+
+    x [B,S,D] -> y [B,S,D] (+ optional decode-ready state).
+    """
+    s = cfg.ssm
+    d_inner, H, conv_dim = ssm_dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xs, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    xBC_raw = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    xBC = jax.nn.silu(_causal_conv(xBC_raw, p["conv_w"], p["conv_b"]))
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    Bq, S, _ = x.shape
+    xs = xs.reshape(Bq, S, H, s.head_dim)
+    Bm = Bm.reshape(Bq, S, s.n_groups, s.d_state)
+    Cm = Cm.reshape(Bq, S, s.n_groups, s.d_state)
+    y, h_final = ssd_chunked(xs, dt, A, Bm, Cm, p["D"], chunk=min(s.chunk, S))
+    y = y.reshape(Bq, S, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    if return_state:
+        w = s.d_conv - 1
+        conv_state = xBC_raw[:, -w:, :].astype(jnp.float32)
+        return out, {"conv": conv_state, "ssm": h_final}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1) recurrent state
+# ---------------------------------------------------------------------------
+def ssm_init_state(cfg: B.ArchConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d_inner, H, conv_dim = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def ssm_decode(cfg: B.ArchConfig, p, state, x):
+    """x [B,1,D] -> (y [B,1,D], new state)."""
+    s = cfg.ssm
+    d_inner, H, conv_dim = ssm_dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xs, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    xBC_new = jnp.concatenate([xs, Bm, Cm], axis=-1)[:, 0]      # [B, conv_dim]
+    # conv ring: state holds last W-1 inputs
+    hist = jnp.concatenate([state["conv"], xBC_new[:, None, :].astype(state["conv"].dtype)], axis=1)
+    w = p["conv_w"].astype(x.dtype)                              # [W, C]
+    xBC = jnp.einsum("bwc,wc->bc", hist.astype(x.dtype), w) + p["conv_b"].astype(x.dtype)
+    xBC = jax.nn.silu(xBC)
+    new_conv = hist[:, 1:]
+    xs1, Bm1, Cm1 = jnp.split(
+        xBC, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1
+    )
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    xs1 = xs1.reshape(-1, H, s.head_dim).astype(jnp.float32)
+    Bm1 = Bm1.reshape(-1, s.n_groups, s.d_state).astype(jnp.float32)
+    Cm1 = Cm1.reshape(-1, s.n_groups, s.d_state).astype(jnp.float32)
+    rep = H // s.n_groups
+    Bh = jnp.repeat(Bm1, rep, axis=1)                            # [B,H,N]
+    Ch = jnp.repeat(Cm1, rep, axis=1)
+    dA = jnp.exp(dt1 * A)                                        # [B,H]
+    h = state["ssm"] * dA[:, :, None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhpn", Bh, xs1, dt1
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch) + p["D"][None, :, None] * xs1
+    y = y.reshape(-1, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, {"conv": new_conv, "ssm": h}

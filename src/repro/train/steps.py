@@ -1,0 +1,123 @@
+"""SPMD step functions: train / prefill / decode — what the gym drives and
+what the dry-run lowers."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import base as B
+from ..models.common import sharded_cross_entropy
+
+
+def compute_loss(model, params, batch, mesh_ctx=None, storage_axes=(),
+                 mtp_coef: float = 0.3):
+    logits, aux = model.apply(params, batch, mesh_ctx, storage_axes)
+    cfg = model.cfg
+    if cfg.n_patches:
+        logits = logits[:, cfg.n_patches:]
+    mask = batch.get("loss_mask")
+    loss = sharded_cross_entropy(logits, batch["labels"], mask)
+    total = loss
+    if "router_lb" in aux:
+        total = total + aux["router_lb"]
+    if "mtp" in aux:
+        total = total + mtp_coef * aux["mtp"]
+    return total, {"ce": loss, **aux}
+
+
+def make_train_step(model, optimizer, mesh_ctx: Optional[B.MeshContext] = None,
+                    storage_axes: Tuple[str, ...] = (), grad_accum: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return compute_loss(model, params, batch, mesh_ctx, storage_axes)
+
+    def train_step(state, batch):
+        if grad_accum > 1:
+            def micro(carry, mb):
+                gsum, msum = carry
+                (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state["params"], mb
+                )
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, grads)
+                msum = jax.tree_util.tree_map(jnp.add, msum, metrics)
+                return (gsum, msum), None
+
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]),
+                batch,
+            )
+            zeros_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"]
+            )
+            mb0 = jax.tree_util.tree_map(lambda x: x[0], mbs)
+            m_shapes = jax.eval_shape(loss_fn, state["params"], mb0)[1]
+            zeros_m = jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype), m_shapes
+            )
+            (grads, metrics), _ = jax.lax.scan(
+                micro, (zeros_g, zeros_m), mbs
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m / grad_accum, metrics)
+        else:
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"], batch
+            )
+        new_params, new_opt = optimizer.update(grads, state["opt"], state["params"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = dict(metrics)
+        metrics["loss"] = metrics["ce"]
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(model, optimizer, rng, param_dtype=None):
+    params = model.init(rng)
+    if param_dtype is not None:
+        params = jax.tree_util.tree_map(
+            lambda p: p.astype(param_dtype)
+            if p.dtype == jnp.float32 else p, params)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(model, optimizer, rng=None, param_dtype=None):
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    return jax.eval_shape(
+        lambda r: init_train_state(model, optimizer, r, param_dtype), rng)
+
+
+def opt_state_shardings(opt_shapes, pspecs, rep):
+    """Shardings for the optimizer state: moment/master trees mirror the
+    param tree; scalars replicated."""
+    out = {}
+    for k, v in opt_shapes.items():
+        out[k] = pspecs if isinstance(v, dict) or k in ("m", "v", "master") else rep
+    return out
+
+
+def make_prefill_step(model, mesh_ctx=None, storage_axes=()):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, mesh_ctx=mesh_ctx,
+                             storage_axes=storage_axes)
+
+    return prefill_step
+
+
+def make_serve_step(model, mesh_ctx=None):
+    """One decode iteration: next-token logits -> greedy token, updated cache."""
+
+    def serve_step(params, cache, tokens, positions):
+        logits, new_cache = model.decode_step(params, cache, tokens, positions,
+                                              mesh_ctx)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+
+    return serve_step

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# smoke tests and benches see ONE device — only dryrun.py forces 512.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,103 @@
+"""Unit tests for the trip-count-aware HLO analyzer — the metrology that the
+roofline tables stand on — against handcrafted HLO text."""
+from repro.launch.hlo_analysis import analyze, parse_module
+
+HLO = """\
+HloModule test
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16] get-tuple-element(%p), index=1
+  %w = f32[16,16] constant({...})
+  %dot.1 = f32[8,16] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16] all-reduce(%dot.1), replica_groups={}, to_apply=%add_comp
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%add_comp (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x0: f32[8,16]) -> f32[8,16] {
+  %x0 = f32[8,16] parameter(0)
+  %c0 = s32[] constant(0)
+  %init = (s32[], f32[8,16]) tuple(%c0, %x0)
+  %loop = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[8,16] get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_parse_module_structure():
+    comps, entry = parse_module(HLO)
+    assert entry == "%main"
+    assert "%body" in comps and "%cond" in comps
+    body = comps["%body"]
+    ops = [i.op for i in body.instrs]
+    assert "dot" in ops and "all-reduce" in ops
+
+
+def test_trip_count_multiplication():
+    res = analyze(HLO)
+    # dot flops = 2*8*16*16 = 4096 per iteration, x10 trips
+    assert res["flops"] >= 4096 * 10
+    assert res["flops"] < 4096 * 10 * 2  # elementwise adds are small
+    # all-reduce bytes = 8*16*4 = 512 * factor 2 * 10 trips
+    assert res["collective_per_kind"]["all-reduce"] == 512 * 2 * 10
+    assert res["collective_counts"]["all-reduce"] == 10
+
+
+def test_bookkeeping_ops_not_counted_as_traffic():
+    res = analyze(HLO)
+    # traffic should be dominated by dot/all-reduce operands, not the
+    # tuple/GTE plumbing: upper bound a few KB * 10 iterations
+    assert res["bytes"] < 100_000
+
+
+DUS_HLO = """\
+HloModule dus
+
+ENTRY %main (buf: f32[1024,128], upd: f32[1,128], i: s32[]) -> f32[1024,128] {
+  %buf = f32[1024,128] parameter(0)
+  %upd = f32[1,128] parameter(1)
+  %i = s32[] parameter(2)
+  %z = s32[] constant(0)
+  ROOT %d = f32[1024,128] dynamic-update-slice(%buf, %upd, %i, %z)
+}
+"""
+
+
+def test_dynamic_update_slice_counts_slice_traffic():
+    res = analyze(DUS_HLO)
+    # ~2x the update slice (read+write, plus index scalars), NOT the 512KB buffer
+    assert 2 * 1 * 128 * 4 <= res["bytes"] <= 2 * 1 * 128 * 4 + 64
+
+
+SLICE_HLO = """\
+HloModule slice
+
+ENTRY %main (stack: f32[64,256,128], i: s32[]) -> f32[1,256,128] {
+  %stack = f32[64,256,128] parameter(0)
+  %i = s32[] parameter(1)
+  %z = s32[] constant(0)
+  ROOT %s = f32[1,256,128] dynamic-slice(%stack, %i, %z, %z), dynamic_slice_sizes={1,256,128}
+}
+"""
+
+
+def test_dynamic_slice_counts_slice_read():
+    res = analyze(SLICE_HLO)
+    # 2x output-sized bytes, not the whole 8MB stack
+    assert res["bytes"] <= 2 * 256 * 128 * 4 + 64

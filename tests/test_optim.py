@@ -1,0 +1,70 @@
+"""Optimizer/schedule unit tests incl. a numpy AdamW oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.optim.adamw import AdamW, global_norm
+from repro.optim.schedules import constant, warmup_cosine, wsd
+
+
+def numpy_adamw(p, g, m, v, t, lr, b1, b2, eps, wd):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mhat = m / (1 - b1 ** t)
+    vhat = v / (1 - b2 ** t)
+    step = mhat / (np.sqrt(vhat) + eps)
+    if p.ndim >= 2:
+        step = step + wd * p
+    return p - lr * step, m, v
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_adamw_matches_numpy_oracle(seed):
+    rng = np.random.default_rng(seed)
+    p = rng.standard_normal((4, 6)).astype(np.float32)
+    opt = AdamW(lr=1e-2, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+                grad_clip=0.0)
+    params = {"w": jnp.asarray(p)}
+    state = opt.init(params)
+    m = np.zeros_like(p)
+    v = np.zeros_like(p)
+    pn = p.copy()
+    for t in range(1, 4):
+        g = rng.standard_normal(p.shape).astype(np.float32)
+        params, state = opt.update({"w": jnp.asarray(g)}, state, params)
+        pn, m, v = numpy_adamw(pn, g, m, v, t, 1e-2, 0.9, 0.95, 1e-8, 0.1)
+    np.testing.assert_allclose(np.asarray(params["w"]), pn, atol=1e-5)
+
+
+def test_grad_clip():
+    opt = AdamW(lr=0.0, grad_clip=1.0)
+    params = {"w": jnp.ones((3, 3))}
+    state = opt.init(params)
+    big = {"w": jnp.full((3, 3), 100.0)}
+    _, state = opt.update(big, state, params)
+    # after clipping, first-moment norm is bounded by (1-b1)*clip
+    assert float(global_norm(state["m"])) <= 0.1 + 1e-6
+
+
+def test_no_decay_on_1d_params():
+    opt = AdamW(lr=1e-2, weight_decay=1.0, grad_clip=0.0)
+    params = {"scale": jnp.ones((8,)), "w": jnp.ones((4, 4))}
+    state = opt.init(params)
+    zero_g = jax.tree_util.tree_map(jnp.zeros_like, params)
+    new_params, _ = opt.update(zero_g, state, params)
+    np.testing.assert_allclose(np.asarray(new_params["scale"]), np.ones(8))
+    assert float(jnp.max(new_params["w"])) < 1.0  # decayed
+
+
+def test_schedules():
+    f = warmup_cosine(1.0, 10, 100, final_frac=0.1)
+    assert float(f(jnp.asarray(0))) == 0.0
+    assert abs(float(f(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(f(jnp.asarray(100))) <= 0.1 + 1e-6
+    g = wsd(1.0, 10, 100, decay_frac=0.2)
+    assert abs(float(g(jnp.asarray(50))) - 1.0) < 1e-6
+    assert float(g(jnp.asarray(100))) < 0.05
+    assert float(constant(0.3)(jnp.asarray(7))) == np.float32(0.3)

@@ -1,0 +1,25 @@
+"""Hyperparameter grid search over declarative config patches."""
+import os
+
+import repro.core.components  # noqa: F401
+from repro.config.resolver import load_yaml
+from repro.core.tuner import grid
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_grid_search_patches_config():
+    raw = load_yaml(os.path.join(ROOT, "examples", "configs", "quickstart.yaml"))
+    results = grid(
+        raw,
+        {"optimizer.config.weight_decay": [0.0, 0.1]},
+        steps=3,
+    )
+    assert len(results) == 2
+    tried = {r["trial"]["optimizer.config.weight_decay"] for r in results}
+    assert tried == {0.0, 0.1}
+    for r in results:
+        assert r["tokens_per_s"] > 0
+        assert r["final_loss"] > 0
+    # sorted by loss
+    assert results[0]["final_loss"] <= results[-1]["final_loss"]
