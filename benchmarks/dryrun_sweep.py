@@ -2,6 +2,10 @@
 one JSON per combo into results/dryrun/ (resumable; skips existing files).
 
   PYTHONPATH=src python -m benchmarks.dryrun_sweep [--multi-pod-only] [--redo]
+
+``--quick`` is the CI smoke mode: one small architecture × the training
+shape on the single-pod mesh, with an aggregate ``--summary`` JSON suitable
+for artifact upload.
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
@@ -12,10 +16,15 @@ import json
 import sys
 import traceback
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
 from repro.configs import ARCH_IDS
 from repro.configs.shapes import SHAPES
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+QUICK_ARCHS = ["qwen1.5-0.5b"]
+QUICK_SHAPES = ["train_4k"]
 
 
 def combo_path(arch, shape, multi_pod, suffix=""):
@@ -29,26 +38,41 @@ def main():
     ap.add_argument("--only-mesh", choices=["single", "multi", "both"],
                     default="both")
     ap.add_argument("--archs", default="")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: one small arch x train_4k, single mesh")
+    ap.add_argument("--summary", default="",
+                    help="write an aggregate JSON of every combo run")
     args = ap.parse_args()
 
     from repro.launch.dryrun import dryrun
 
     os.makedirs(OUT_DIR, exist_ok=True)
     archs = args.archs.split(",") if args.archs else ARCH_IDS
+    shapes = list(SHAPES)
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.only_mesh]
+    if args.quick:
+        archs = args.archs.split(",") if args.archs else QUICK_ARCHS
+        shapes = QUICK_SHAPES
+        meshes = [False]
     failures = []
+    summary = {"quick": args.quick, "combos": []}
     for multi_pod in meshes:
         for arch in archs:
-            for shape in SHAPES:
+            for shape in shapes:
                 path = combo_path(arch, shape, multi_pod)
-                if os.path.exists(path) and not args.redo:
-                    continue
                 tag = f"{arch} x {shape} x {'2x16x16' if multi_pod else '16x16'}"
+                if os.path.exists(path) and not args.redo:
+                    if args.summary:
+                        with open(path) as f:
+                            summary["combos"].append(json.load(f))
+                    continue
                 print(f"== {tag}", flush=True)
                 try:
                     res = dryrun(arch, shape, multi_pod=multi_pod, verbose=False)
                     with open(path, "w") as f:
                         json.dump(res, f, indent=2, default=str)
+                    if args.summary:
+                        summary["combos"].append(res)
                     if "skipped" in res:
                         print(f"   SKIP: {res['skipped'][:80]}", flush=True)
                     else:
@@ -61,12 +85,22 @@ def main():
                             flush=True)
                 except Exception as e:
                     failures.append((tag, repr(e)))
+                    if args.summary:
+                        summary["combos"].append(
+                            {"arch": arch, "shape": shape, "failed": repr(e)})
                     print(f"   FAIL {type(e).__name__}: {e}", flush=True)
                     traceback.print_exc()
                 gc.collect()
     print(f"sweep done; {len(failures)} failures", flush=True)
     for t, e in failures:
         print("  FAILED:", t, e[:200], flush=True)
+    if args.summary:
+        summary["n_failures"] = len(failures)
+        os.makedirs(os.path.dirname(os.path.abspath(args.summary)),
+                    exist_ok=True)
+        with open(args.summary, "w") as f:
+            json.dump(summary, f, indent=2, default=str)
+        print(f"summary -> {args.summary}", flush=True)
     return 1 if failures else 0
 
 

@@ -1,52 +1,69 @@
-"""Ablation sweep (the paper's raison d'être): vary ONE component of the
-declarative setup — the sharding plan and the FSDP unit size — with zero code
-changes, and compare compiled rooflines for the production mesh.
+"""Ablation sweep (the paper's raison d'être), now fully declarative: the
+plan x FSDP-unit campaign lives in configs/ablation_dryrun.yaml; this driver
+only loads the spec, runs it (resuming past completed trials), and prints the
+ranked comparison table.
 
-  PYTHONPATH=src python examples/ablation_sweep.py [--arch stablelm-1.6b]
+  PYTHONPATH=src python examples/ablation_sweep.py [--arch stablelm-1.6b] [--list]
 """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 import argparse
-import json
+import os
 import sys
 
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SPEC = os.path.join(os.path.dirname(__file__), "configs", "ablation_dryrun.yaml")
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="stablelm-1.6b")
-    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--config", default=SPEC, help="sweep YAML to run")
+    ap.add_argument("--arch", default="", help="override the swept architecture")
+    ap.add_argument("--shape", default="", help="override the input shape")
+    ap.add_argument("--list", action="store_true",
+                    help="show the expanded trials without running")
     args = ap.parse_args()
 
-    from repro.launch.dryrun import dryrun
+    from repro.launch.sweep import main as sweep_main
+    from repro.sweep.spec import SweepSpec, set_path
 
-    rows = []
-    # ablation A: sharding plan
-    for plan in ("ddp", "fsdp", "fsdp_tp"):
-        r = dryrun(args.arch, args.shape, plan_name=plan, verbose=False)
-        rows.append({
-            "ablation": f"plan={plan}",
-            "compute_s": round(r["compute_term_s"], 3),
-            "memory_s": round(r["memory_term_s"], 3),
-            "collective_s": round(r["collective_term_s"], 3),
-            "dominant": r["dominant_term"],
-        })
-    # ablation B: FSDP unit size (scan block)
-    for k in (1, 2, 4, 8):
-        r = dryrun(args.arch, args.shape, plan_name="fsdp_tp", scan_block=k,
-                   verbose=False)
-        ag = r["collective_per_kind"]["all-gather"]
-        rows.append({
-            "ablation": f"fsdp_unit={k}",
-            "collective_s": round(r["collective_term_s"], 3),
-            "all_gather_bytes": int(ag),
-            "n_all_gathers": r["collective_counts"]["all-gather"],
-            "dominant": r["dominant_term"],
-        })
-    print(json.dumps(rows, indent=2))
+    argv = ["--config", args.config]
+    if args.list:
+        argv.append("--list")
+    if args.arch or args.shape:
+        # override by patching the spec document the same way trials patch
+        # the base config, then run from the rewritten spec
+        import tempfile
+
+        import yaml
+
+        from repro.config.resolver import load_yaml
+        from repro.sweep.spec import SweepError
+
+        doc = load_yaml(args.config)
+        sw = doc.get("sweep", doc)  # from_dict accepts both layouts
+        if "base" not in sw:
+            raise SweepError(
+                "--arch/--shape overrides need an inline 'base' mapping in "
+                f"{args.config} (specs using 'base_config' cannot be patched)")
+        if args.arch:
+            set_path(sw, "base.arch", args.arch, create_missing=True)
+        if args.shape:
+            set_path(sw, "base.shape", args.shape, create_missing=True)
+        # re-key the sweep name + directory on the overrides so resume never
+        # mistakes another configuration's records for this one
+        tag = "ablation_" + "_".join(
+            filter(None, [args.arch, args.shape])).replace("/", "-")
+        sw["name"] = tag
+        sw["output_dir"] = os.path.join("results", "sweeps", tag)
+        SweepSpec.from_dict(doc)  # validate before writing the temp spec
+        tmp = tempfile.NamedTemporaryFile(
+            "w", suffix=".yaml", delete=False, prefix="ablation_sweep_")
+        yaml.safe_dump(doc, tmp)
+        tmp.close()
+        argv[1] = tmp.name
+    return sweep_main(argv)
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

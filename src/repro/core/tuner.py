@@ -1,51 +1,53 @@
 """Hyperparameter / throughput search (paper §2: "hyperparameter search
 functionality for scalability / throughput optimization").
 
-Grid search over declarative config patches: each trial deep-patches the raw
-config dict, resolves a fresh object graph, runs a few steps, and reports
-loss + measured tokens/s. No framework code changes per trial — the paper's
-ablation workflow, automated.
+Thin compatibility wrapper over the declarative sweep subsystem
+(``repro.sweep``): ``grid()`` expands a flat ``{path: values}`` space into a
+one-axis sweep spec, runs it in-process through the gym backend, and returns
+the historic ranked-result shape.  New code should author sweep YAMLs and use
+``repro.sweep`` / ``python -m repro.launch.sweep`` directly.
 """
 from __future__ import annotations
 
-import copy
-import itertools
-import time
-from typing import Any, Dict, Iterable, List, Tuple
+from typing import Any, Dict, Iterable, List
 
-from ..config.resolver import resolve_config
+from ..sweep.report import rank
+from ..sweep.runner import SweepRunner
+from ..sweep.spec import SweepSpec, set_path
 
+__all__ = ["grid", "set_path"]
 
-def _set_path(cfg: Dict[str, Any], path: str, value: Any) -> None:
-    keys = path.split(".")
-    node = cfg
-    for k in keys[:-1]:
-        node = node[k]
-    node[keys[-1]] = value
+# historic private alias (pre-sweep callers patched configs through this)
+_set_path = set_path
 
 
 def grid(raw_config: Dict[str, Any], space: Dict[str, Iterable[Any]],
          steps: int = 10, gym_key: str = "gym") -> List[Dict[str, Any]]:
     """space: {"optimizer.config.lr": [1e-3, 3e-4], "gym.config.grad_accum": [1, 2]}"""
-    names = list(space)
+    spec = SweepSpec(
+        name="tuner-grid",
+        base=raw_config,
+        axes=[{"type": "grid",
+               "parameters": {p: list(v) for p, v in space.items()}}],
+        backend="gym",
+        steps=steps,
+        gym_key=gym_key,
+        seed_path=None,
+        create_missing=True,  # historic _set_path created missing leaf keys
+    )
+    records = SweepRunner(spec).run(resume=False)
     results = []
-    for values in itertools.product(*(space[n] for n in names)):
-        raw = copy.deepcopy(raw_config)
-        for n, v in zip(names, values):
-            _set_path(raw, n, v)
-        graph = resolve_config(raw)
-        gym = graph[gym_key]
-        t0 = time.time()
-        out = gym.run(steps=steps)
-        wall = time.time() - t0
-        hist = out["history"]
-        loader = gym.loader
-        tokens = steps * loader.global_batch * loader.dataset.seq_len
+    for rec in rank(records, "final_loss", "min"):
+        if rec.get("status") != "ok":
+            raise RuntimeError(
+                f"trial {rec.get('trial_id')} {rec.get('status')}: "
+                f"{rec.get('error', rec.get('skip_reason', ''))}"
+            )
+        m = rec["metrics"]
         results.append({
-            "trial": dict(zip(names, values)),
-            "final_loss": hist[-1]["loss"],
-            "tokens_per_s": int(tokens / wall),
-            "wall_s": round(wall, 2),
+            "trial": dict(rec["patches"]),
+            "final_loss": m["final_loss"],
+            "tokens_per_s": m["tokens_per_s"],
+            "wall_s": m["wall_s"],
         })
-    results.sort(key=lambda r: r["final_loss"])
     return results

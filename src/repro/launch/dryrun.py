@@ -158,6 +158,8 @@ def dryrun(arch: str, shape_name: str, multi_pod: bool = False,
     t_compile = time.time() - t0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jaxlib returns [dict]
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
     except Exception:

@@ -1,0 +1,105 @@
+"""Declarative sweep CLI: run an ablation campaign from one YAML document.
+
+  PYTHONPATH=src python -m repro.launch.sweep --config examples/configs/ablation_dryrun.yaml
+  PYTHONPATH=src python -m repro.launch.sweep --config <sweep.yaml> --list
+  PYTHONPATH=src python -m repro.launch.sweep --config <sweep.yaml> --report-only
+
+A second invocation of the same sweep resumes: trials whose JSONL records
+already exist under the sweep directory are skipped, only missing/failed
+trials run.
+"""
+import os
+
+if __name__ == "__main__" or os.environ.get("REPRO_SWEEP_FORCE_DEVICES"):
+    # dryrun-backend sweeps compile on placeholder devices; the flag must be
+    # set before JAX initialises its platform. Harmless for gym sweeps (the
+    # gym uses one device unless its config asks for a mesh).
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+    )
+
+import argparse
+import json
+import sys
+
+from ..sweep.report import load_records, write_report
+from ..sweep.runner import SweepRunner
+from ..sweep.spec import SweepError, SweepSpec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.sweep",
+        description="Run a declarative ablation sweep from a YAML spec.",
+    )
+    ap.add_argument("--config", required=True, help="sweep YAML document")
+    ap.add_argument("--output-dir", default="",
+                    help="override the spec's sweep directory")
+    ap.add_argument("--list", action="store_true",
+                    help="print the expanded trials and exit (no execution)")
+    ap.add_argument("--report-only", action="store_true",
+                    help="regenerate report from existing records and exit")
+    ap.add_argument("--redo", action="store_true",
+                    help="ignore existing records, rerun every trial")
+    ap.add_argument("--max-trials", type=int, default=0,
+                    help="cap how many new trials run this invocation")
+    args = ap.parse_args(argv)
+
+    try:
+        spec = SweepSpec.from_yaml(args.config)
+    except (SweepError, FileNotFoundError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    if args.output_dir:
+        spec.output_dir = args.output_dir
+    trials = spec.trials()
+
+    if args.list:
+        print(f"sweep {spec.name!r}: backend={spec.backend} "
+              f"trials={len(trials)}")
+        for t in trials:
+            patches = dict(t.patches)
+            if t.seed is not None:
+                patches["<seed>"] = t.seed
+            print(f"  [{t.index}] {t.trial_id}: {json.dumps(patches)}")
+        return 0
+
+    if not spec.output_dir:
+        spec.output_dir = os.path.join("results", "sweeps", spec.name)
+
+    if args.report_only:
+        try:
+            summary = write_report(spec)
+        except SweepError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        _print_report(spec, summary)
+        return 0
+
+    print(f"sweep {spec.name!r}: {len(trials)} trials -> {spec.output_dir}",
+          flush=True)
+    runner = SweepRunner(spec, log=lambda m: print(m, flush=True))
+    records = runner.run(resume=not args.redo, max_trials=args.max_trials)
+    n_resumed = sum(1 for r in records if r.get("resumed"))
+    n_failed = sum(1 for r in records if r.get("status") == "failed")
+    print(f"done: {len(records)} records ({n_resumed} resumed, "
+          f"{n_failed} failed)", flush=True)
+
+    summary = write_report(spec, load_records(spec.output_dir))
+    _print_report(spec, summary)
+    return 1 if n_failed else 0
+
+
+def _print_report(spec: SweepSpec, summary) -> None:
+    with open(os.path.join(spec.output_dir, "report.txt")) as f:
+        print(f.read())
+    best = summary.get("best")
+    if best:
+        print(f"best trial: {best['trial_id']} "
+              f"({spec.objective_mode} {spec.objective_metric} = "
+              f"{best['value']:.6g})")
+    print(f"report: {os.path.join(spec.output_dir, 'report.json')}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

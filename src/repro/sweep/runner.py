@@ -1,0 +1,228 @@
+"""Sweep execution: one process, pluggable backends, resumable JSONL records.
+
+All trials of a campaign run in the same Python process (no per-trial
+subprocess): the ``gym`` backend re-resolves the object graph per trial but
+shares the JAX runtime and compilation cache, and the ``dryrun`` backend
+shares the 512-placeholder-device CPU platform across compiles.  Every
+finished trial appends one JSON line to ``<output_dir>/records.jsonl``; a
+rerun of the same sweep loads that file first and skips every trial whose
+record already exists (failed trials are retried), so an interrupted campaign
+resumes where it stopped.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import traceback
+from typing import Any, Callable, Dict, List, Optional
+
+from .spec import SweepSpec, Trial
+
+RECORDS_FILE = "records.jsonl"
+SPEC_FILE = "spec.json"
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+def _gym_backend(spec: SweepSpec) -> Callable[[Dict[str, Any]], Dict[str, Any]]:
+    """Resolve the patched graph and train ``spec.steps`` steps."""
+    import repro.core.components  # noqa: F401  (populates the registry)
+    from ..config.resolver import resolve_config
+
+    def run(raw: Dict[str, Any]) -> Dict[str, Any]:
+        graph = resolve_config(raw)
+        if spec.gym_key not in graph:
+            from .spec import SweepError
+
+            raise SweepError(
+                f"resolved config has no {spec.gym_key!r} entry; "
+                f"top-level entries: {sorted(graph)}"
+            )
+        gym = graph[spec.gym_key]
+        t0 = time.time()
+        out = gym.run(steps=spec.steps)
+        wall = time.time() - t0
+        hist = out["history"]
+        loader = gym.loader
+        tokens = spec.steps * loader.global_batch * loader.dataset.seq_len
+        return {
+            "final_loss": float(hist[-1]["loss"]),
+            "first_loss": float(hist[0]["loss"]),
+            "tokens_per_s": int(tokens / wall) if wall > 0 else 0,
+            "steps": spec.steps,
+            "wall_s": round(wall, 2),
+        }
+
+    return run
+
+
+_DRYRUN_KEEP = (
+    "arch", "shape", "mesh", "plan", "chips", "dominant_term",
+    "compute_term_s", "memory_term_s", "collective_term_s",
+    "hlo_flops_per_dev", "hlo_bytes_per_dev", "collective_bytes_per_dev",
+    "collective_counts", "useful_flops_ratio", "n_params", "n_params_active",
+    "lower_s", "compile_s",
+)
+
+
+def _dryrun_backend(spec: SweepSpec) -> Callable[[Dict[str, Any]], Dict[str, Any]]:
+    """Compile the trial on placeholder devices and report roofline terms.
+
+    The base config is the ``dryrun()`` kwarg mapping (``arch``, ``shape``
+    plus any of ``plan_name``, ``scan_block``, ``multi_pod``, ...); patch
+    paths are those flat keys.
+    """
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+    )
+    from ..launch.dryrun import dryrun
+
+    def run(raw: Dict[str, Any]) -> Dict[str, Any]:
+        kwargs = dict(raw)
+        arch = kwargs.pop("arch")
+        shape = kwargs.pop("shape")
+        res = dryrun(arch, shape, verbose=False, **kwargs)
+        if "skipped" in res:
+            return {"skipped": res["skipped"]}
+        metrics = {k: res[k] for k in _DRYRUN_KEEP if k in res}
+        metrics["roofline_step_s"] = max(
+            res["compute_term_s"], res["memory_term_s"],
+            res["collective_term_s"],
+        )
+        return metrics
+
+    return run
+
+
+BACKENDS: Dict[str, Callable[[SweepSpec], Callable]] = {
+    "gym": _gym_backend,
+    "dryrun": _dryrun_backend,
+}
+
+
+# ---------------------------------------------------------------------------
+# the runner
+# ---------------------------------------------------------------------------
+class SweepRunner:
+    """Executes every trial of a spec, persisting + resuming via JSONL."""
+
+    def __init__(self, spec: SweepSpec,
+                 log: Optional[Callable[[str], None]] = None) -> None:
+        self.spec = spec
+        self.log = log or (lambda msg: None)
+
+    # -- persistence --------------------------------------------------------
+    def _records_path(self) -> Optional[str]:
+        if not self.spec.output_dir:
+            return None
+        return os.path.join(self.spec.output_dir, RECORDS_FILE)
+
+    def _load_existing(self) -> Dict[str, Dict[str, Any]]:
+        path = self._records_path()
+        if not path or not os.path.exists(path):
+            return {}
+        existing: Dict[str, Dict[str, Any]] = {}
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                rec = json.loads(line)
+                existing[rec["trial_id"]] = rec
+        return existing
+
+    def _append(self, record: Dict[str, Any]) -> None:
+        path = self._records_path()
+        if not path:
+            return
+        with open(path, "a") as f:
+            f.write(json.dumps(record, default=str) + "\n")
+
+    def _write_spec_snapshot(self) -> None:
+        if not self.spec.output_dir:
+            return
+        os.makedirs(self.spec.output_dir, exist_ok=True)
+        snap = {
+            "name": self.spec.name,
+            "backend": self.spec.backend,
+            "objective": {"metric": self.spec.objective_metric,
+                          "mode": self.spec.objective_mode},
+            "n_trials": len(self.spec.trials()),
+            "axes": self.spec.axes,
+            "seeds": self.spec.seeds,
+            "steps": self.spec.steps,
+        }
+        with open(os.path.join(self.spec.output_dir, SPEC_FILE), "w") as f:
+            json.dump(snap, f, indent=2, default=str)
+
+    # -- execution ----------------------------------------------------------
+    def run(self, resume: bool = True,
+            max_trials: int = 0) -> List[Dict[str, Any]]:
+        """Run (or resume) the sweep; returns one record per trial, in trial
+        order.  ``max_trials`` > 0 caps how many *new* trials execute (the
+        resume workflow for budgeted sessions)."""
+        spec = self.spec
+        trials = spec.trials()
+        self._write_spec_snapshot()
+        records_path = self._records_path()
+        if not resume and records_path and os.path.exists(records_path):
+            os.remove(records_path)  # full redo starts a fresh record log
+        existing = self._load_existing() if resume else {}
+        backend = BACKENDS[spec.backend](spec)
+
+        records: List[Dict[str, Any]] = []
+        ran = 0
+        for trial in trials:
+            prior = existing.get(trial.trial_id)
+            if prior is not None and prior.get("status") != "failed":
+                prior = dict(prior, resumed=True)
+                records.append(prior)
+                self.log(f"[{trial.index + 1}/{len(trials)}] "
+                         f"{trial.trial_id}: already done, skipping")
+                continue
+            if max_trials and ran >= max_trials:
+                self.log(f"[{trial.index + 1}/{len(trials)}] "
+                         f"{trial.trial_id}: deferred (max_trials reached)")
+                continue
+            ran += 1
+            records.append(self._run_one(backend, trial, len(trials)))
+        return records
+
+    def _run_one(self, backend: Callable, trial: Trial,
+                 total: int) -> Dict[str, Any]:
+        spec = self.spec
+        self.log(f"[{trial.index + 1}/{total}] {trial.trial_id}: running")
+        record: Dict[str, Any] = {
+            "sweep": spec.name,
+            "trial_id": trial.trial_id,
+            "index": trial.index,
+            "patches": trial.patches,
+            "seed": trial.seed,
+            "backend": spec.backend,
+        }
+        t0 = time.time()
+        try:
+            metrics = backend(spec.trial_config(trial))
+            if "skipped" in metrics:
+                record["status"] = "skipped"
+                record["skip_reason"] = metrics["skipped"]
+            else:
+                record["status"] = "ok"
+                record["metrics"] = metrics
+        except Exception as e:  # record the failure, keep sweeping
+            record["status"] = "failed"
+            record["error"] = f"{type(e).__name__}: {e}"
+            record["traceback"] = traceback.format_exc(limit=8)
+            self.log(f"  FAILED: {record['error']}")
+        record["wall_s"] = round(time.time() - t0, 2)
+        self._append(record)
+        return record
+
+
+def run_sweep(spec: SweepSpec, resume: bool = True,
+              log: Optional[Callable[[str], None]] = None,
+              max_trials: int = 0) -> List[Dict[str, Any]]:
+    """One-call convenience: execute a sweep spec and return its records."""
+    return SweepRunner(spec, log=log).run(resume=resume, max_trials=max_trials)

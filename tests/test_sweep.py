@@ -1,0 +1,442 @@
+"""Sweep subsystem: axis expansion, patch-path validation, resumable runner,
+report ranking, and the resolver error paths that sweep patching exercises."""
+import json
+import os
+
+import pytest
+
+import repro.core.components  # noqa: F401  (populates the registry)
+from repro.config.resolver import ConfigError, load_yaml, resolve_config
+from repro.sweep import runner as runner_mod
+from repro.sweep.report import (
+    best_trial,
+    comparison_table,
+    load_records,
+    rank,
+    summarize,
+    write_report,
+)
+from repro.sweep.runner import SweepRunner
+from repro.sweep.spec import SweepError, SweepSpec, apply_patches, set_path
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+QUICKSTART = os.path.join(ROOT, "examples", "configs", "quickstart.yaml")
+
+
+# ---------------------------------------------------------------------------
+# set_path: the deep-patch primitive
+# ---------------------------------------------------------------------------
+def test_set_path_nested_dict():
+    d = {"a": {"b": {"c": 1}}}
+    set_path(d, "a.b.c", 2)
+    assert d == {"a": {"b": {"c": 2}}}
+
+
+def test_set_path_list_index():
+    d = {"xs": [{"v": 1}, {"v": 2}]}
+    set_path(d, "xs.1.v", 9)
+    assert d["xs"][1]["v"] == 9
+    set_path(d, "xs.0", "replaced")
+    assert d["xs"][0] == "replaced"
+
+
+def test_set_path_missing_key_rejected_with_available_keys():
+    with pytest.raises(SweepError, match=r"available keys: \['known'\]"):
+        set_path({"known": 1}, "typo", 2)
+
+
+def test_set_path_missing_intermediate_rejected():
+    with pytest.raises(SweepError, match="'middle' not found"):
+        set_path({"a": {}}, "a.middle.leaf", 1)
+
+
+def test_set_path_create_missing_adds_leaf_only():
+    d = {"a": {}}
+    set_path(d, "a.new", 5, create_missing=True)
+    assert d == {"a": {"new": 5}}
+    # intermediates are still validated even with create_missing
+    with pytest.raises(SweepError, match="not found"):
+        set_path(d, "a.nope.deep", 1, create_missing=True)
+
+
+def test_set_path_list_index_out_of_range():
+    with pytest.raises(SweepError, match="out of range"):
+        set_path({"xs": [1, 2]}, "xs.5", 0)
+
+
+def test_set_path_non_integer_list_index():
+    with pytest.raises(SweepError, match="must be an integer"):
+        set_path({"xs": [1, 2]}, "xs.first", 0)
+
+
+def test_set_path_cannot_descend_into_scalar():
+    with pytest.raises(SweepError, match="cannot descend"):
+        set_path({"a": 3}, "a.b.c", 1)
+    with pytest.raises(SweepError, match="cannot assign"):
+        set_path({"a": 3}, "a.b", 1)
+
+
+def test_set_path_empty_segment():
+    with pytest.raises(SweepError, match="empty segment"):
+        set_path({"a": 1}, "a..b", 1)
+
+
+def test_apply_patches_does_not_mutate_base():
+    base = {"a": {"b": 1}}
+    out = apply_patches(base, {"a.b": 2})
+    assert base["a"]["b"] == 1 and out["a"]["b"] == 2
+
+
+# ---------------------------------------------------------------------------
+# axis expansion
+# ---------------------------------------------------------------------------
+BASE = {"opt": {"lr": 0.1, "wd": 0.0}, "plan": "ddp",
+        "gym": {"config": {"seed": 0}}}
+
+
+def _spec(**kw):
+    kw.setdefault("name", "t")
+    kw.setdefault("base", BASE)
+    return SweepSpec.from_dict(kw)
+
+
+def test_grid_axis_product_and_order():
+    spec = _spec(axes=[{"type": "grid",
+                        "parameters": {"opt.lr": [0.1, 0.2],
+                                       "plan": ["ddp", "fsdp"]}}])
+    trials = spec.trials()
+    assert len(trials) == 4
+    assert trials[0].patches == {"opt.lr": 0.1, "plan": "ddp"}
+    assert trials[1].patches == {"opt.lr": 0.1, "plan": "fsdp"}
+    assert trials[3].patches == {"opt.lr": 0.2, "plan": "fsdp"}
+
+
+def test_zip_axis_rows():
+    spec = _spec(axes=[{"type": "zip",
+                        "parameters": {"opt.lr": [0.1, 0.2],
+                                       "opt.wd": [0.0, 0.1]}}])
+    trials = spec.trials()
+    assert [t.patches for t in trials] == [
+        {"opt.lr": 0.1, "opt.wd": 0.0},
+        {"opt.lr": 0.2, "opt.wd": 0.1},
+    ]
+
+
+def test_zip_axis_length_mismatch_rejected():
+    with pytest.raises(SweepError, match="equal length"):
+        _spec(axes=[{"type": "zip",
+                     "parameters": {"opt.lr": [0.1, 0.2], "opt.wd": [0.0]}}])
+
+
+def test_list_axis_rows():
+    spec = _spec(axes=[{"type": "list",
+                        "trials": [{"plan": "fsdp"},
+                                   {"plan": "fsdp_tp", "opt.lr": 0.2}]}])
+    assert [t.patches for t in spec.trials()] == [
+        {"plan": "fsdp"}, {"plan": "fsdp_tp", "opt.lr": 0.2}]
+
+
+def test_axis_blocks_combine_by_product():
+    spec = _spec(axes=[{"type": "grid", "parameters": {"plan": ["ddp", "fsdp"]}},
+                       {"type": "grid", "parameters": {"opt.lr": [0.1, 0.2, 0.3]}}])
+    assert len(spec.trials()) == 6
+
+
+def test_duplicate_path_across_blocks_rejected():
+    with pytest.raises(SweepError, match="more than one axis"):
+        _spec(axes=[{"type": "grid", "parameters": {"plan": ["ddp"]}},
+                    {"type": "list", "trials": [{"plan": "fsdp"}]}]).trials()
+
+
+def test_unknown_axis_type_rejected():
+    with pytest.raises(SweepError, match="unknown axis type"):
+        _spec(axes=[{"type": "random", "parameters": {"plan": ["ddp"]}}])
+
+
+def test_seed_replication_multiplies_trials():
+    spec = _spec(axes=[{"type": "grid", "parameters": {"plan": ["ddp", "fsdp"]}}],
+                 seeds=[0, 1, 2], seed_path="gym.config.seed")
+    trials = spec.trials()
+    assert len(trials) == 6
+    assert {t.seed for t in trials} == {0, 1, 2}
+    cfg = spec.trial_config(trials[1])
+    assert cfg["gym"]["config"]["seed"] == trials[1].seed
+
+
+def test_seed_replication_without_seed_path_rejected():
+    with pytest.raises(SweepError, match="seed_path"):
+        _spec(axes=[], seeds=[0, 1], seed_path=None)
+
+
+def test_invalid_patch_path_fails_at_spec_load_not_mid_run():
+    with pytest.raises(SweepError, match="not found"):
+        _spec(axes=[{"type": "grid", "parameters": {"opt.typo": [1]}}])
+
+
+def test_unknown_sweep_keys_rejected():
+    with pytest.raises(SweepError, match="unknown sweep keys"):
+        _spec(axes=[], extra_key=1)
+
+
+def test_trial_ids_stable_and_unique():
+    spec = _spec(axes=[{"type": "grid",
+                        "parameters": {"opt.lr": [0.1, 0.2]}}],
+                 seeds=[0, 1], seed_path="gym.config.seed")
+    ids = [t.trial_id for t in spec.trials()]
+    assert len(set(ids)) == 4
+    assert ids[0] == "lr=0.1__seed=0"
+
+
+def test_example_sweep_yamls_expand():
+    spec = SweepSpec.from_yaml(
+        os.path.join(ROOT, "examples", "configs", "ablation_dryrun.yaml"))
+    assert spec.backend == "dryrun"
+    assert len(spec.trials()) == 12  # 3 plans x 4 fsdp-unit sizes
+    spec = SweepSpec.from_yaml(
+        os.path.join(ROOT, "examples", "configs", "lr_sweep.yaml"))
+    assert spec.backend == "gym"
+    assert len(spec.trials()) == 6  # 3 zipped rows x 2 seeds
+
+
+# ---------------------------------------------------------------------------
+# runner: persistence + resume (stub backend — no training needed)
+# ---------------------------------------------------------------------------
+def _stub_spec(tmp_path, fail_ids=()):
+    spec = _spec(axes=[{"type": "grid",
+                        "parameters": {"opt.lr": [0.1, 0.2, 0.3]}}],
+                 output_dir=str(tmp_path / "sweep"))
+
+    calls = []
+
+    def backend_factory(s):
+        def run(raw):
+            calls.append(raw["opt"]["lr"])
+            if raw["opt"]["lr"] in fail_ids:
+                raise RuntimeError("boom")
+            return {"final_loss": raw["opt"]["lr"] * 2, "wall_s": 0.0}
+
+        return run
+
+    return spec, backend_factory, calls
+
+
+def test_runner_writes_one_jsonl_record_per_trial(tmp_path, monkeypatch):
+    spec, factory, calls = _stub_spec(tmp_path)
+    monkeypatch.setitem(runner_mod.BACKENDS, "gym", factory)
+    records = SweepRunner(spec).run()
+    assert [r["status"] for r in records] == ["ok"] * 3
+    lines = open(os.path.join(spec.output_dir, "records.jsonl")).readlines()
+    assert len(lines) == 3
+    assert json.loads(lines[0])["metrics"]["final_loss"] == 0.2
+    assert os.path.exists(os.path.join(spec.output_dir, "spec.json"))
+
+
+def test_runner_resumes_by_skipping_completed_trials(tmp_path, monkeypatch):
+    spec, factory, calls = _stub_spec(tmp_path)
+    monkeypatch.setitem(runner_mod.BACKENDS, "gym", factory)
+    SweepRunner(spec).run()
+    assert len(calls) == 3
+    records = SweepRunner(spec).run()  # second invocation: all resumed
+    assert len(calls) == 3, "resume must not re-execute completed trials"
+    assert all(r.get("resumed") for r in records)
+    lines = open(os.path.join(spec.output_dir, "records.jsonl")).readlines()
+    assert len(lines) == 3, "resume must not duplicate records"
+
+
+def test_runner_retries_failed_trials_on_resume(tmp_path, monkeypatch):
+    spec, factory, calls = _stub_spec(tmp_path, fail_ids={0.2})
+    monkeypatch.setitem(runner_mod.BACKENDS, "gym", factory)
+    records = SweepRunner(spec).run()
+    assert [r["status"] for r in records] == ["ok", "failed", "ok"]
+    assert "boom" in records[1]["error"]
+
+    spec2, factory2, calls2 = _stub_spec(tmp_path)  # same dir, no failures
+    monkeypatch.setitem(runner_mod.BACKENDS, "gym", factory2)
+    records = SweepRunner(spec2).run()
+    assert calls2 == [0.2], "only the failed trial re-runs"
+    assert [r["status"] for r in records] == ["ok", "ok", "ok"]
+
+
+def test_runner_redo_replaces_records_without_duplicates(tmp_path, monkeypatch):
+    spec, factory, calls = _stub_spec(tmp_path)
+    monkeypatch.setitem(runner_mod.BACKENDS, "gym", factory)
+    SweepRunner(spec).run()
+    SweepRunner(spec).run(resume=False)
+    assert len(calls) == 6, "redo re-executes every trial"
+    lines = open(os.path.join(spec.output_dir, "records.jsonl")).readlines()
+    assert len(lines) == 3, "redo must not append duplicate records"
+
+
+def test_runner_max_trials_caps_new_work(tmp_path, monkeypatch):
+    spec, factory, calls = _stub_spec(tmp_path)
+    monkeypatch.setitem(runner_mod.BACKENDS, "gym", factory)
+    records = SweepRunner(spec).run(max_trials=2)
+    assert len(calls) == 2 and len(records) == 2
+    records = SweepRunner(spec).run(max_trials=2)
+    assert len(calls) == 3, "second invocation finishes the remainder"
+    assert len(records) == 3
+
+
+def test_runner_without_output_dir_is_in_memory_only(tmp_path, monkeypatch):
+    spec, factory, calls = _stub_spec(tmp_path)
+    spec.output_dir = None
+    monkeypatch.setitem(runner_mod.BACKENDS, "gym", factory)
+    records = SweepRunner(spec).run()
+    assert len(records) == 3 and not (tmp_path / "sweep").exists()
+
+
+def test_tuner_grid_creates_missing_leaf_keys(monkeypatch):
+    """Historic tuner behaviour: grid() may patch keys absent from the raw
+    config (component defaults like gym.config.grad_accum)."""
+    from repro.core.tuner import grid
+
+    def factory(s):
+        return lambda raw: {"final_loss": float(raw["gym"]["config"]["grad_accum"]),
+                            "tokens_per_s": 1, "wall_s": 0.0}
+
+    monkeypatch.setitem(runner_mod.BACKENDS, "gym", factory)
+    res = grid({"gym": {"config": {"seed": 0}}},
+               {"gym.config.grad_accum": [2, 1]}, steps=1)
+    assert [r["trial"] for r in res] == [{"gym.config.grad_accum": 1},
+                                         {"gym.config.grad_accum": 2}]
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+def _records():
+    return [
+        {"trial_id": "a", "index": 0, "status": "ok",
+         "metrics": {"final_loss": 3.0, "tokens_per_s": 10}},
+        {"trial_id": "b", "index": 1, "status": "ok",
+         "metrics": {"final_loss": 1.0, "tokens_per_s": 30}},
+        {"trial_id": "c", "index": 2, "status": "failed", "error": "x"},
+    ]
+
+
+def test_rank_and_best_trial():
+    ranked = rank(_records(), "final_loss", "min")
+    assert [r["trial_id"] for r in ranked] == ["b", "a", "c"]
+    assert best_trial(_records(), "final_loss")["trial_id"] == "b"
+    assert best_trial(_records(), "tokens_per_s", "max")["trial_id"] == "b"
+    assert best_trial([_records()[2]], "final_loss") is None
+
+
+def test_comparison_table_ranks_and_marks_missing():
+    table = comparison_table(_records(), "final_loss")
+    lines = table.splitlines()
+    assert lines[0].split()[:3] == ["rank", "trial", "final_loss"]
+    assert lines[2].split()[1] == "b"
+    assert "failed" in lines[-1] and "-" in lines[-1]
+
+
+def test_write_report_roundtrip(tmp_path, monkeypatch):
+    spec, factory, _ = _stub_spec(tmp_path)
+    monkeypatch.setitem(runner_mod.BACKENDS, "gym", factory)
+    records = SweepRunner(spec).run()
+    summary = write_report(spec, records)
+    assert summary["best"]["trial_id"] == "lr=0.1"
+    assert summary["by_status"] == {"ok": 3}
+    on_disk = json.load(open(os.path.join(spec.output_dir, "report.json")))
+    assert on_disk["best"]["value"] == pytest.approx(0.2)
+    # report can be regenerated from records.jsonl alone
+    assert len(load_records(spec.output_dir)) == 3
+    assert summarize(load_records(spec.output_dir),
+                     "final_loss")["best"]["trial_id"] == "lr=0.1"
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def test_cli_list_expands_without_running(capsys):
+    from repro.launch.sweep import main
+
+    rc = main(["--config",
+               os.path.join(ROOT, "examples", "configs", "ablation_dryrun.yaml"),
+               "--list"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "trials=12" in out
+    assert "plan_name=ddp__scan_block=1" in out
+
+
+def test_cli_rejects_malformed_spec(tmp_path, capsys):
+    from repro.launch.sweep import main
+
+    bad = tmp_path / "bad.yaml"
+    bad.write_text("sweep:\n  backend: warp\n  base: {a: 1}\n")
+    assert main(["--config", str(bad), "--list"]) == 2
+    assert "unknown backend" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# resolver error paths exercised by sweep patching
+# ---------------------------------------------------------------------------
+def test_sweep_patch_to_unknown_component_key_fails_trial(tmp_path):
+    raw = load_yaml(QUICKSTART)
+    spec = SweepSpec.from_dict({
+        "name": "bad-variant", "backend": "gym", "steps": 1,
+        "base": raw, "output_dir": str(tmp_path / "s"),
+        "axes": [{"type": "list",
+                  "trials": [{"optimizer.variant_key": "nonexistent"}]}],
+    })
+    records = SweepRunner(spec).run()
+    assert records[0]["status"] == "failed"
+    assert "unknown variant" in records[0]["error"]
+
+
+def test_sweep_patch_cannot_invent_config_keys_by_default():
+    raw = load_yaml(QUICKSTART)
+    with pytest.raises(SweepError, match="not found"):
+        SweepSpec.from_dict({
+            "name": "typo", "backend": "gym", "base": raw,
+            "axes": [{"type": "grid",
+                      "parameters": {"optimizer.config.learning_rate": [1.0]}}],
+        })
+
+
+def test_resolver_rejects_patched_unexpected_kwarg():
+    raw = load_yaml(QUICKSTART)
+    spec = SweepSpec.from_dict({
+        "name": "extra", "backend": "gym", "base": raw,
+        "create_missing": True,
+        "axes": [{"type": "grid",
+                  "parameters": {"optimizer.config.learning_rate": [1.0]}}],
+    })
+    with pytest.raises(ConfigError, match="unexpected config keys"):
+        resolve_config(spec.trial_config(spec.trials()[0]))
+
+
+def test_resolver_reports_patched_undefined_variable():
+    raw = load_yaml(QUICKSTART)
+    spec = SweepSpec.from_dict({
+        "name": "var", "backend": "gym", "base": raw,
+        "axes": [{"type": "list",
+                  "trials": [{"optimizer.config.lr": "${undefined_lr}"}]}],
+    })
+    with pytest.raises(ConfigError, match="undefined variable"):
+        resolve_config(spec.trial_config(spec.trials()[0]))
+
+
+# ---------------------------------------------------------------------------
+# gym backend end-to-end (small but real: resolves + trains per trial)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_gym_backend_sweep_end_to_end(tmp_path):
+    raw = load_yaml(QUICKSTART)
+    spec = SweepSpec.from_dict({
+        "name": "mini", "backend": "gym", "steps": 2,
+        "base": raw, "output_dir": str(tmp_path / "mini"),
+        "axes": [{"type": "grid",
+                  "parameters": {"optimizer.config.weight_decay": [0.0, 0.1]}}],
+    })
+    records = SweepRunner(spec).run()
+    assert [r["status"] for r in records] == ["ok", "ok"]
+    for rec in records:
+        assert rec["metrics"]["final_loss"] > 0
+        assert rec["metrics"]["tokens_per_s"] > 0
+    # second invocation resumes
+    again = SweepRunner(spec).run()
+    assert all(r.get("resumed") for r in again)
+    summary = write_report(spec)
+    assert summary["best"] is not None
