@@ -24,8 +24,11 @@ def main():
                     help="show the expanded trials without running")
     args = ap.parse_args()
 
-    from repro.launch.sweep import main as sweep_main
+    from repro.run.cli import main as cli_main
     from repro.sweep.spec import SweepSpec, set_path
+
+    def sweep_main(argv):
+        return cli_main(["sweep", *argv])
 
     argv = ["--config", args.config]
     if args.list:

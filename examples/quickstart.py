@@ -1,5 +1,6 @@
-"""Quickstart: the whole training setup is the YAML dependency graph next to
-this file; this script only resolves it and runs the gym (paper Fig. 1).
+"""Quickstart: the whole training setup is the run document next to this
+file; this script only hands it to the declarative Run API (paper Fig. 1).
+Equivalent CLI:  python -m repro train --config examples/configs/quickstart.yaml
 
   PYTHONPATH=src python examples/quickstart.py [steps]
 """
@@ -8,19 +9,22 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import repro.core.components  # noqa: F401  (populates the component registry)
-from repro.config.resolver import resolve_yaml
+from repro.config.resolver import load_yaml
+from repro.run import api as run_api
+from repro.run.overrides import apply_overrides
 
 
 def main():
-    steps = int(sys.argv[1]) if len(sys.argv) > 1 else 60
     cfg_path = os.path.join(os.path.dirname(__file__), "configs",
                             "quickstart.yaml")
-    graph = resolve_yaml(cfg_path)
-    out = graph["gym"].run(steps=steps)
-    h = out["history"]
-    print(f"quickstart: loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f} "
-          f"over {steps} steps")
+    doc = load_yaml(cfg_path)
+    if len(sys.argv) > 1:
+        doc = apply_overrides(doc, [("run.train.steps", int(sys.argv[1]))])
+    out = run_api.execute_doc(doc, default_name="quickstart",
+                              config_dir=os.path.dirname(cfg_path))
+    print(f"quickstart: loss {out['first_loss']:.3f} -> "
+          f"{out['final_loss']:.3f} over {out['steps']} steps "
+          f"(artifact: {out['output_dir']})")
 
 
 if __name__ == "__main__":

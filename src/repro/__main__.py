@@ -1,0 +1,7 @@
+"""``python -m repro`` — the one declarative entrypoint (see repro.run.cli)."""
+import sys
+
+from .run.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

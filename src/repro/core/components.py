@@ -8,8 +8,11 @@ from typing import Any, Dict, Optional
 
 from ..config.registry import DEFAULT_REGISTRY as REG
 from ..configs import ARCH_IDS, get_config, get_reduced, reduce_config
+from ..configs.shapes import SHAPES, InputShape
 from ..data.packed_dataset import ChunkedLMDataset, PackedDataset, ShardedLoader, synthetic_dataset
 from ..data.tokenizer import BpeTokenizer, ByteTokenizer
+from ..launch import mesh as MESH
+from ..launch.specs import PrecisionPolicy
 from ..models import build_model
 from ..models.base import ArchConfig, MLAConfig, MoEConfig, SSMConfig, Model
 from ..optim import schedules as SCHED
@@ -26,6 +29,7 @@ IF.TokenizerIF.register(ByteTokenizer)
 IF.TokenizerIF.register(BpeTokenizer)
 IF.DatasetIF.register(ChunkedLMDataset)
 IF.LoaderIF.register(ShardedLoader)
+IF.MeshProviderIF.register(MESH.MeshProvider)
 
 _REGISTERED = False
 
@@ -69,16 +73,28 @@ def register_all() -> None:
              ShardingPlan)
 
     # -- meshes ----------------------------------------------------------------
-    _reg("mesh_provider", "single_device", lambda: None)
-    _reg("mesh_provider", "local", _local_mesh)
-    _reg("mesh_provider", "production", _production_mesh)
+    # Every variant returns a MeshProvider (build() -> mesh, lazily) — no more
+    # factories returning bare lambdas that consumers must callable()-sniff.
+    _reg("mesh_provider", "single_device", MESH.SingleDeviceMesh,
+         IF.MeshProviderIF)
+    _reg("mesh_provider", "local", MESH.LocalMesh)
+    _reg("mesh_provider", "production", MESH.ProductionMesh)
+    _reg("mesh_provider", "split", MESH.SplitMesh)
+
+    # -- input shapes ----------------------------------------------------------
+    for name in SHAPES:
+        _reg("shape", name, (lambda n: (lambda: SHAPES[n]))(name), InputShape)
+    _reg("shape", "custom", _custom_shape, InputShape)
+
+    # -- precision policies ----------------------------------------------------
+    _reg("precision", "policy",
+         lambda bf16_params=False, serve_bf16=False:
+         PrecisionPolicy(bf16_params=bf16_params, serve_bf16=serve_bf16),
+         PrecisionPolicy)
 
     # -- tokenizers -----------------------------------------------------------
     _reg("tokenizer", "byte", ByteTokenizer, IF.TokenizerIF)
-    _reg("tokenizer", "bpe",
-         lambda path="", n_merges=256: (BpeTokenizer.load(path) if path
-                                        else BpeTokenizer()),
-         IF.TokenizerIF)
+    _reg("tokenizer", "bpe", _bpe_tokenizer, IF.TokenizerIF)
 
     # -- datasets / loaders ----------------------------------------------------
     _reg("dataset", "packed_chunked",
@@ -111,7 +127,7 @@ def register_all() -> None:
                 seed=0, grad_accum=1, log_every=10, eval_every=0, ckpt_every=0,
                 ckpt_dir="", tracker=None:
          Gym(model=model, optimizer=optimizer, loader=loader,
-             mesh=(mesh_provider() if callable(mesh_provider) else mesh_provider),
+             mesh=_build_mesh(mesh_provider),
              plan=sharding_plan, seed=seed, grad_accum=grad_accum,
              log_every=log_every, eval_every=eval_every, ckpt_every=ckpt_every,
              ckpt_dir=ckpt_dir, logger=tracker),
@@ -134,16 +150,46 @@ def _custom_cfg(**kw) -> ArchConfig:
     return ArchConfig(**kw)
 
 
-def _local_mesh(dp: int = 1, tp: int = 1):
-    from ..launch.mesh import make_local_mesh
+def _build_mesh(mesh_provider):
+    """``mesh_provider`` components are MeshProvider objects; a raw mesh (or
+    None) passes through for direct Gym construction."""
+    if mesh_provider is None:
+        return None
+    build = getattr(mesh_provider, "build", None)
+    if callable(build):
+        return build()
+    return mesh_provider
 
-    return lambda: make_local_mesh(dp, tp)
+
+def _custom_shape(seq_len: int, global_batch: int, kind: str,
+                  name: str = "custom") -> InputShape:
+    if kind not in ("train", "prefill", "decode"):
+        raise ValueError(f"shape kind must be train|prefill|decode, got {kind!r}")
+    return InputShape(name, int(seq_len), int(global_batch), kind)
 
 
-def _production_mesh(multi_pod: bool = False):
-    from ..launch.mesh import make_production_mesh
-
-    return lambda: make_production_mesh(multi_pod=multi_pod)
+def _bpe_tokenizer(path: str = "", corpus: str = "",
+                   n_merges: Optional[int] = None) -> BpeTokenizer:
+    """Load from ``path``, or train ``n_merges`` merges on a ``corpus`` text
+    file.  ``n_merges`` without a corpus is a misconfiguration — it used to be
+    silently ignored."""
+    if path:
+        if n_merges is not None:
+            raise ValueError(
+                "tokenizer/bpe: n_merges applies when training from 'corpus'; "
+                "a tokenizer loaded from 'path' has its merges baked in"
+            )
+        return BpeTokenizer.load(path)
+    if corpus:
+        with open(corpus) as f:
+            texts = f.read().splitlines()
+        return BpeTokenizer.train(texts, n_merges=256 if n_merges is None
+                                  else int(n_merges))
+    if n_merges is not None:
+        raise ValueError(
+            "tokenizer/bpe: n_merges needs a 'corpus' text file to train on"
+        )
+    return BpeTokenizer()
 
 
 def _synthetic_chunked(n_tokens: int, vocab: int, prefix: str, seq_len: int,

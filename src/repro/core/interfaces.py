@@ -12,6 +12,7 @@ from __future__ import annotations
 import abc
 from typing import Any, Callable, Dict
 
+from ..configs.shapes import InputShape
 from ..models.base import ArchConfig, Model
 from ..sharding.plans import ShardingPlan
 
@@ -75,7 +76,9 @@ def register_builtin_interfaces():
             "tokenizer": TokenizerIF,
             "dataset": DatasetIF,
             "loader": LoaderIF,
-            "mesh_provider": object,
+            "mesh_provider": MeshProviderIF,
+            "shape": InputShape,
+            "precision": object,
             "gym": Gym,
             "tracker": TrackerIF,
             "checkpointer": object,

@@ -5,13 +5,17 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 combination on placeholder devices; emit memory / cost / collective analysis
 for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
 
-Usage:
+Run API (preferred — every knob is a YAML-addressable component):
+
+  PYTHONPATH=src python -m repro dryrun --config examples/configs/dryrun.yaml
+
+Deprecated flag shim (delegates through the same Run API):
+
   PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-1.6b \
       --shape train_4k [--multi-pod] [--plan fsdp_tp] [--json out.json]
 """
 import argparse
 import json
-import re
 import sys
 import time
 from typing import Any, Dict
@@ -68,30 +72,56 @@ def dryrun(arch: str, shape_name: str, multi_pod: bool = False,
            plan_name: str = "", scan_block: int = 0,
            verbose: bool = True, mesh_split: str = "",
            mla_absorb: bool = False, grad_accum: int = 1,
-           serve_bf16: bool = False, bf16_params: bool = False) -> Dict[str, Any]:
+           serve_bf16: bool = False, bf16_params: bool = False,
+           keep_messages: bool = False) -> Dict[str, Any]:
+    """Historic flag-based entrypoint, now a thin wrapper over the
+    component-driven :func:`compile_run` core."""
     shape = SHAPES[shape_name]
-    cfg = SP.adapt_config(get_config(arch), shape)
+    cfg = get_config(arch)
     if scan_block:
         cfg = cfg.with_(scan_block_size=scan_block)
     if mla_absorb:
         cfg = cfg.with_(mla_absorb=True)
-    ok, why = SP.supports_shape(cfg, shape)
-    if not ok:
-        return {"arch": arch, "shape": shape_name, "skipped": why}
-
     if mesh_split:  # e.g. "32x8": re-split the same 256 chips (perf tuning)
-        import numpy as np
-
         dp, tp = (int(x) for x in mesh_split.split("x"))
         assert dp * tp == 256 and not multi_pod
-        mesh = jax.sharding.Mesh(
-            np.asarray(jax.devices()[: dp * tp]).reshape(dp, tp),
-            ("data", "model"),
-        )
+        mesh = MESH.SplitMesh(dp, tp)
     else:
-        mesh = MESH.make_production_mesh(multi_pod=multi_pod)
-    plan = (PL.make_plan(plan_name, multi_pod) if plan_name
-            else PL.default_plan_for(cfg, multi_pod))
+        mesh = MESH.ProductionMesh(multi_pod=multi_pod)
+    plan = PL.make_plan(plan_name, multi_pod) if plan_name else None
+    return compile_run(cfg, shape, mesh, plan, grad_accum=grad_accum,
+                       serve_bf16=serve_bf16, bf16_params=bf16_params,
+                       verbose=verbose, keep_messages=keep_messages,
+                       arch_label=arch, shape_label=shape_name)
+
+
+def compile_run(cfg, shape, mesh, plan=None, *, grad_accum: int = 1,
+                bf16_params: bool = False, serve_bf16: bool = False,
+                verbose: bool = False, keep_messages: bool = False,
+                arch_label: str = "", shape_label: str = "") -> Dict[str, Any]:
+    """Lower + compile one (arch config × shape × mesh × plan) point and emit
+    the memory / cost / collective analysis.
+
+    Every argument is a resolved component (the Run API's ``dryrun`` graph):
+    ``cfg`` an ArchConfig, ``shape`` an InputShape, ``mesh`` a jax Mesh or a
+    MeshProvider (built lazily, after the skip check), ``plan`` a
+    ShardingPlan (default: per-arch), precision via the two bf16 flags.
+    """
+    arch_label = arch_label or cfg.name
+    shape_label = shape_label or shape.name
+    cfg = SP.adapt_config(cfg, shape)
+    ok, why = SP.supports_shape(cfg, shape)
+    if not ok:
+        return {"arch": arch_label, "shape": shape_label, "skipped": why}
+
+    if hasattr(mesh, "build"):  # MeshProvider — build only past the skip check
+        mesh = mesh.build()
+    if mesh is None:
+        raise ValueError("compile_run needs a mesh (a MeshProvider that "
+                         "produces none cannot be dry-run)")
+    multi_pod = "pod" in mesh.axis_names
+    if plan is None:
+        plan = PL.default_plan_for(cfg, multi_pod)
     mesh_ctx = PL.mesh_context(plan, mesh)
     storage_axes = plan.ep_storage_axes if plan.ep else ()
     model = build_model(cfg)
@@ -172,8 +202,8 @@ def dryrun(arch: str, shape_name: str, multi_pod: bool = False,
     flops_dev = float(ana["flops"])
     bytes_dev = float(ana["bytes"])
     res = {
-        "arch": arch,
-        "shape": shape_name,
+        "arch": arch_label,
+        "shape": shape_label,
         "mesh": "x".join(str(s) for s in mesh.devices.shape),
         "plan": plan.describe(),
         "chips": int(chips),
@@ -216,10 +246,19 @@ def dryrun(arch: str, shape_name: str, multi_pod: bool = False,
         print(json.dumps(res, indent=2, default=str))
         if mem is not None:
             print("memory_analysis:", mem)
+    if keep_messages:
+        res["messages"] = ana["messages"]
     return res
 
 
 def main():
+    """DEPRECATED shim: delegates to ``python -m repro dryrun``."""
+    import warnings
+
+    warnings.warn(
+        "python -m repro.launch.dryrun is deprecated; use "
+        "`python -m repro dryrun --config <run.yaml>` (this shim delegates "
+        "through the same Run API)", DeprecationWarning, stacklevel=2)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True, choices=list(SHAPES))
@@ -233,10 +272,19 @@ def main():
     ap.add_argument("--bf16-params", action="store_true")
     ap.add_argument("--json", default="")
     args = ap.parse_args()
-    res = dryrun(args.arch, args.shape, args.multi_pod, args.plan,
-                 args.scan_block, mesh_split=args.mesh_split,
-                 mla_absorb=args.mla_absorb, grad_accum=args.grad_accum,
-                 serve_bf16=args.serve_bf16, bf16_params=args.bf16_params)
+
+    from ..run import api as run_api
+    from ..run.legacy import legacy_dryrun_doc
+
+    doc = legacy_dryrun_doc({
+        "arch": args.arch, "shape": args.shape, "multi_pod": args.multi_pod,
+        "plan_name": args.plan, "scan_block": args.scan_block,
+        "mesh_split": args.mesh_split, "mla_absorb": args.mla_absorb,
+        "grad_accum": args.grad_accum, "serve_bf16": args.serve_bf16,
+        "bf16_params": args.bf16_params,
+    }, name=f"dryrun_{args.arch}_{args.shape}".replace("/", "-"))
+    res = run_api.execute_doc(doc, options={"verbose": True},
+                              log=lambda m: print(m, flush=True))
     if args.json:
         with open(args.json, "w") as f:
             json.dump(res, f, indent=2, default=str)

@@ -1,4 +1,10 @@
-"""Serving launcher: batched prefill + greedy decode with the KV cache.
+"""Serving: batched prefill + greedy decode with the KV cache.
+
+Run API (preferred):
+
+  PYTHONPATH=src python -m repro serve --config examples/configs/serve.yaml
+
+Deprecated flag shim (delegates through the same Run API):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
       --prompt-len 32 --gen 16 --batch 4
@@ -8,45 +14,43 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+from typing import Any, Callable, Dict, Optional
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--ckpt", default="")
-    args = ap.parse_args()
+def serve_benchmark(model, *, batch: int = 4, prompt_len: int = 32,
+                    gen: int = 16, ckpt: str = "", seed: int = 0,
+                    log: Optional[Callable[[str], None]] = None) -> Dict[str, Any]:
+    """Prefill + greedy-decode a resolved model; returns throughput metrics.
 
+    The model is a resolved ``model`` component (its ``cfg`` supplies the
+    modality extras); ``ckpt`` optionally restores trained params.
+    """
     import jax
     import jax.numpy as jnp
 
-    from repro.configs import get_config, get_reduced
-    from repro.models import build_model
-    from repro.train import steps as ST
+    from ..train import steps as ST
 
-    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    if args.ckpt:
-        from repro.train.checkpoint import restore_checkpoint
+    log = log or (lambda msg: print(msg, flush=True))
+    cfg = model.cfg
+    params = model.init(jax.random.PRNGKey(seed))
+    if ckpt:
+        from ..train.checkpoint import restore_checkpoint
 
-        params = restore_checkpoint(params, args.ckpt)
+        params = restore_checkpoint(params, ckpt)
 
-    B, P, G = args.batch, args.prompt_len, args.gen
+    B, P, G = int(batch), int(prompt_len), int(gen)
     max_len = P + G
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 3, cfg.vocab)
-    batch = {"tokens": prompts}
+    prompts = jax.random.randint(jax.random.PRNGKey(seed + 1), (B, P), 3,
+                                 cfg.vocab)
+    batch_in: Dict[str, Any] = {"tokens": prompts}
     if cfg.arch_type == "audio":
-        batch["frames"] = jnp.zeros((B, cfg.encoder_frames, cfg.d_model))
+        batch_in["frames"] = jnp.zeros((B, cfg.encoder_frames, cfg.d_model))
     if cfg.n_patches:
-        batch["patch_embeds"] = jnp.zeros((B, cfg.n_patches, cfg.d_model))
+        batch_in["patch_embeds"] = jnp.zeros((B, cfg.n_patches, cfg.d_model))
 
     t0 = time.time()
     prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=max_len))
-    logits, cache = prefill(params, batch)
+    logits, cache = prefill(params, batch_in)
     jax.block_until_ready(logits)
     t_prefill = time.time() - t0
 
@@ -60,12 +64,61 @@ def main() -> int:
         generated.append(tokens)
     jax.block_until_ready(tokens)
     t_decode = time.time() - t0
-    gen = jnp.stack(generated, axis=1)
-    print(f"prefill: {B}x{P} tokens in {t_prefill:.3f}s "
-          f"({B * P / max(t_prefill, 1e-9):.0f} tok/s)")
-    print(f"decode:  {B}x{G - 1} tokens in {t_decode:.3f}s "
-          f"({B * (G - 1) / max(t_decode, 1e-9):.0f} tok/s)")
-    print("generated ids[0]:", gen[0].tolist())
+    gen_ids = jnp.stack(generated, axis=1)
+
+    res = {
+        "arch": cfg.name,
+        "batch": B,
+        "prompt_len": P,
+        "gen": G,
+        "prefill_s": round(t_prefill, 3),
+        "prefill_tok_s": int(B * P / max(t_prefill, 1e-9)),
+        "decode_s": round(t_decode, 3),
+        "decode_tok_s": int(B * (G - 1) / max(t_decode, 1e-9)),
+        "generated_ids_0": gen_ids[0].tolist(),
+    }
+    log(f"prefill: {B}x{P} tokens in {t_prefill:.3f}s "
+        f"({res['prefill_tok_s']} tok/s)")
+    log(f"decode:  {B}x{G - 1} tokens in {t_decode:.3f}s "
+        f"({res['decode_tok_s']} tok/s)")
+    log(f"generated ids[0]: {res['generated_ids_0']}")
+    return res
+
+
+def main() -> int:
+    """DEPRECATED shim: delegates to ``python -m repro serve``."""
+    import warnings
+
+    warnings.warn(
+        "python -m repro.launch.serve is deprecated; use "
+        "`python -m repro serve --config <run.yaml>` (this shim delegates "
+        "through the same Run API)", DeprecationWarning, stacklevel=2)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    from ..configs import canonical
+    from ..run import api as run_api
+
+    doc = {
+        "run": {
+            "kind": "serve",
+            "name": f"serve_{canonical(args.arch)}",
+            "serve": {"batch": args.batch, "prompt_len": args.prompt_len,
+                      "gen": args.gen, "ckpt": args.ckpt},
+        },
+        "arch": {"component_key": "arch_config",
+                 "variant_key": canonical(args.arch),
+                 "config": {"reduced": args.reduced}},
+        "model": {"component_key": "model", "variant_key": "auto",
+                  "config": {"arch_config": {"instance_key": "arch"}}},
+    }
+    run_api.execute_doc(doc, log=lambda m: print(m, flush=True))
     return 0
 
 

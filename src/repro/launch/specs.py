@@ -2,6 +2,7 @@
 weak-type-correct, shardable, no device allocation."""
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -12,6 +13,14 @@ from ..models import base as B
 
 I32 = jnp.int32
 BF16 = jnp.bfloat16
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Numeric policy, addressable from YAML (``precision`` component)."""
+
+    bf16_params: bool = False   # train: bf16 weights + f32 master copies
+    serve_bf16: bool = False    # serve/decode: weights kept in bf16
 
 
 def sds(shape, dtype):

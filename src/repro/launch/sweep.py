@@ -1,12 +1,10 @@
-"""Declarative sweep CLI: run an ablation campaign from one YAML document.
+"""Declarative sweep CLI — DEPRECATED shim over ``python -m repro sweep``.
 
-  PYTHONPATH=src python -m repro.launch.sweep --config examples/configs/ablation_dryrun.yaml
-  PYTHONPATH=src python -m repro.launch.sweep --config <sweep.yaml> --list
-  PYTHONPATH=src python -m repro.launch.sweep --config <sweep.yaml> --report-only
+  PYTHONPATH=src python -m repro sweep --config examples/configs/ablation_dryrun.yaml
 
-A second invocation of the same sweep resumes: trials whose JSONL records
-already exist under the sweep directory are skipped, only missing/failed
-trials run.
+The historic flags (``--list``, ``--report-only``, ``--redo``,
+``--max-trials``, ``--output-dir``) are part of the new CLI's sweep
+subcommand; this module simply prepends the subcommand and delegates.
 """
 import os
 
@@ -18,87 +16,22 @@ if __name__ == "__main__" or os.environ.get("REPRO_SWEEP_FORCE_DEVICES"):
         "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
     )
 
-import argparse
-import json
 import sys
-
-from ..sweep.report import load_records, write_report
-from ..sweep.runner import SweepRunner
-from ..sweep.spec import SweepError, SweepSpec
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(
-        prog="python -m repro.launch.sweep",
-        description="Run a declarative ablation sweep from a YAML spec.",
-    )
-    ap.add_argument("--config", required=True, help="sweep YAML document")
-    ap.add_argument("--output-dir", default="",
-                    help="override the spec's sweep directory")
-    ap.add_argument("--list", action="store_true",
-                    help="print the expanded trials and exit (no execution)")
-    ap.add_argument("--report-only", action="store_true",
-                    help="regenerate report from existing records and exit")
-    ap.add_argument("--redo", action="store_true",
-                    help="ignore existing records, rerun every trial")
-    ap.add_argument("--max-trials", type=int, default=0,
-                    help="cap how many new trials run this invocation")
-    args = ap.parse_args(argv)
+    """DEPRECATED shim: delegates to ``python -m repro sweep``."""
+    import warnings
 
-    try:
-        spec = SweepSpec.from_yaml(args.config)
-    except (SweepError, FileNotFoundError) as e:
-        print(f"error: {e}", file=sys.stderr)
-        return 2
-    if args.output_dir:
-        spec.output_dir = args.output_dir
-    trials = spec.trials()
+    warnings.warn(
+        "python -m repro.launch.sweep is deprecated; use "
+        "`python -m repro sweep --config <sweep.yaml>` (this shim delegates "
+        "through the same Run API)", DeprecationWarning, stacklevel=2)
+    from ..run.cli import main as cli_main
 
-    if args.list:
-        print(f"sweep {spec.name!r}: backend={spec.backend} "
-              f"trials={len(trials)}")
-        for t in trials:
-            patches = dict(t.patches)
-            if t.seed is not None:
-                patches["<seed>"] = t.seed
-            print(f"  [{t.index}] {t.trial_id}: {json.dumps(patches)}")
-        return 0
-
-    if not spec.output_dir:
-        spec.output_dir = os.path.join("results", "sweeps", spec.name)
-
-    if args.report_only:
-        try:
-            summary = write_report(spec)
-        except SweepError as e:
-            print(f"error: {e}", file=sys.stderr)
-            return 2
-        _print_report(spec, summary)
-        return 0
-
-    print(f"sweep {spec.name!r}: {len(trials)} trials -> {spec.output_dir}",
-          flush=True)
-    runner = SweepRunner(spec, log=lambda m: print(m, flush=True))
-    records = runner.run(resume=not args.redo, max_trials=args.max_trials)
-    n_resumed = sum(1 for r in records if r.get("resumed"))
-    n_failed = sum(1 for r in records if r.get("status") == "failed")
-    print(f"done: {len(records)} records ({n_resumed} resumed, "
-          f"{n_failed} failed)", flush=True)
-
-    summary = write_report(spec, load_records(spec.output_dir))
-    _print_report(spec, summary)
-    return 1 if n_failed else 0
-
-
-def _print_report(spec: SweepSpec, summary) -> None:
-    with open(os.path.join(spec.output_dir, "report.txt")) as f:
-        print(f.read())
-    best = summary.get("best")
-    if best:
-        print(f"best trial: {best['trial_id']} "
-              f"({spec.objective_mode} {spec.objective_metric} = "
-              f"{best['value']:.6g})")
-    print(f"report: {os.path.join(spec.output_dir, 'report.json')}")
+    if argv is None:
+        argv = sys.argv[1:]
+    return cli_main(["sweep", *argv])
 
 
 if __name__ == "__main__":

@@ -1,0 +1,22 @@
+"""The declarative run API: one config grammar for every entrypoint.
+
+A *run document* is a YAML mapping with a ``run:`` header naming the run
+kind (``train | dryrun | serve | trace | sweep``) and a per-kind settings
+section; everything else is the component graph the resolver builds.  Every
+run materializes its fully-resolved config plus a content fingerprint into
+its output directory, so any run — including each sweep trial — can be
+replayed byte-for-byte from the artifact:
+
+    python -m repro <kind> --config run.yaml [--set path=value ...]
+    python -m repro replay <run_dir>
+    python -m repro validate examples/configs
+"""
+from .config import (  # noqa: F401
+    KINDS,
+    RunConfig,
+    RunError,
+    parse_run_doc,
+    register_run_settings,
+)
+from .fingerprint import canonical_json, fingerprint, materialize  # noqa: F401
+from .overrides import apply_overrides, parse_overrides  # noqa: F401

@@ -1,0 +1,132 @@
+"""Run execution: parse -> materialize -> fingerprint -> dispatch.
+
+Run kinds are registry components (``component_key="run_kind"``), so a new
+workload is a registry entry plus a settings schema — not a new script:
+
+    from repro.run import register_run_settings
+    from repro.run.kinds import register_run_kind
+
+    register_run_kind("eval", MyEvalSettings, my_eval_executor)
+
+Every execution writes ``resolved.yaml`` + ``manifest.json`` (the replay
+artifact) and ``result.json`` (the outcome) into the run's output directory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Callable, Dict, Optional
+
+from ..config.registry import Registry
+from .config import RunConfig, RunError, parse_run_doc
+from .fingerprint import (
+    RESOLVED_FILE,
+    fingerprint,
+    materialize,
+    read_manifest,
+    write_artifacts,
+)
+
+RESULT_FILE = "result.json"
+
+
+@dataclasses.dataclass
+class RunContext:
+    """Everything an executor needs."""
+
+    cfg: RunConfig
+    resolved_doc: Dict[str, Any]
+    fingerprint: str
+    registry: Optional[Registry] = None
+    options: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    log: Callable[[str], None] = lambda msg: None
+
+
+def _registry(registry: Optional[Registry]) -> Registry:
+    import repro.core.components  # noqa: F401  (populates the registry)
+    import repro.run.kinds  # noqa: F401  (registers the run kinds)
+    from ..config.registry import DEFAULT_REGISTRY
+
+    return registry or DEFAULT_REGISTRY
+
+
+def _run_kind(reg: Registry, kind: str):
+    """Resolve the run-kind executor; custom registries that carry no
+    run_kind entries fall back to the built-in kinds."""
+    from ..config.registry import DEFAULT_REGISTRY, RegistryError
+
+    try:
+        return reg.build("run_kind", kind)
+    except RegistryError:
+        if reg is not DEFAULT_REGISTRY:
+            return DEFAULT_REGISTRY.build("run_kind", kind)
+        raise
+
+
+def execute(cfg: RunConfig, *, registry: Optional[Registry] = None,
+            options: Optional[Dict[str, Any]] = None,
+            log: Optional[Callable[[str], None]] = None,
+            write_files: bool = True) -> Dict[str, Any]:
+    """Execute a parsed run config; returns the executor's result mapping
+    (always containing ``fingerprint`` and ``output_dir``)."""
+    reg = _registry(registry)
+    resolved = materialize(cfg.doc, reg)
+    fp = fingerprint(resolved)
+    if write_files and cfg.output_dir:
+        write_artifacts(cfg.output_dir, resolved, cfg.name, cfg.kind)
+    ctx = RunContext(cfg=cfg, resolved_doc=resolved, fingerprint=fp,
+                     registry=reg, options=dict(options or {}),
+                     log=log or (lambda msg: None))
+    kind = _run_kind(reg, cfg.kind)
+    result = kind.execute(ctx) or {}
+    result.setdefault("kind", cfg.kind)
+    result["fingerprint"] = fp
+    result["output_dir"] = cfg.output_dir
+    if write_files and cfg.output_dir and result.get("_no_result_file") is None:
+        with open(os.path.join(cfg.output_dir, RESULT_FILE), "w") as f:
+            json.dump(result, f, indent=2, default=str)
+    result.pop("_no_result_file", None)
+    return result
+
+
+def execute_doc(doc: Dict[str, Any], *, kind: Optional[str] = None,
+                default_name: str = "run", config_dir: str = ".",
+                registry: Optional[Registry] = None,
+                options: Optional[Dict[str, Any]] = None,
+                log: Optional[Callable[[str], None]] = None,
+                write_files: bool = True) -> Dict[str, Any]:
+    """Parse a raw run document and execute it."""
+    cfg = parse_run_doc(doc, kind=kind, default_name=default_name,
+                        config_dir=config_dir)
+    return execute(cfg, registry=registry, options=options, log=log,
+                   write_files=write_files)
+
+
+def replay(run_dir: str, *, registry: Optional[Registry] = None,
+           options: Optional[Dict[str, Any]] = None,
+           log: Optional[Callable[[str], None]] = None) -> Dict[str, Any]:
+    """Re-execute a run from its materialized artifact.
+
+    Loads ``<run_dir>/resolved.yaml``, verifies its fingerprint against the
+    manifest, and executes it — producing the identical run (same resolved
+    config, same fingerprint).
+    """
+    import yaml
+
+    path = os.path.join(run_dir, RESOLVED_FILE)
+    if not os.path.exists(path):
+        raise RunError(f"no resolved config at {path}; not a run directory?")
+    with open(path) as f:
+        doc = yaml.safe_load(f)
+    manifest = read_manifest(run_dir)
+    reg = _registry(registry)
+    fp = fingerprint(materialize(doc, reg))
+    if fp != manifest.get("fingerprint"):
+        raise RunError(
+            f"fingerprint mismatch: resolved.yaml materializes to {fp} but "
+            f"the manifest records {manifest.get('fingerprint')} — the "
+            f"artifact was edited or the registry changed"
+        )
+    return execute_doc(doc, config_dir=run_dir, registry=reg,
+                       options=options, log=log)

@@ -1,0 +1,236 @@
+"""Typed run configuration: the grammar every entrypoint resolves through.
+
+A run document is one YAML mapping:
+
+.. code-block:: yaml
+
+    run:
+      kind: train            # train | dryrun | serve | trace | sweep
+      name: quickstart       # optional; defaults to the YAML file stem
+      output_dir: results/runs/quickstart   # optional; derived from name
+      train:                 # per-kind settings (section key == kind)
+        steps: 60
+    variables: {seq_len: 64}
+    gym: {component_key: gym, variant_key: standard, config: {...}}
+    # ... every other top-level key is the component graph
+
+Legacy documents are normalized on load: a bare component graph (no ``run:``
+section) becomes a ``train`` run, and a ``sweep:`` document becomes a
+``sweep`` run, so every pre-existing YAML keeps working through the one CLI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Dict, Optional, Type
+
+
+class RunError(Exception):
+    """Malformed run document."""
+
+
+# ---------------------------------------------------------------------------
+# per-kind settings (typed; unknown keys are rejected at parse time)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TrainSettings:
+    """``run.train``: drive the resolved gym."""
+
+    steps: int = 100
+    resume: bool = False
+    gym_key: str = "gym"          # top-level graph entry that is the gym
+
+
+@dataclasses.dataclass
+class DryrunSettings:
+    """``run.dryrun``: compile-time analysis of the resolved components.
+
+    Graph entries: ``arch`` (arch_config, required), ``shape`` (required),
+    ``mesh`` (mesh_provider, default production), ``plan`` (sharding_plan,
+    default per-arch), ``precision`` (precision policy, optional).
+    """
+
+    grad_accum: int = 1
+
+
+@dataclasses.dataclass
+class ServeSettings:
+    """``run.serve``: batched prefill + greedy decode.
+
+    Graph entries: ``model`` (or ``arch`` to build one).
+    """
+
+    batch: int = 4
+    prompt_len: int = 32
+    gen: int = 16
+    ckpt: str = ""
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class TraceSettings:
+    """``run.trace``: dump the compiled collective schedule.
+
+    Graph entries: same as ``dryrun``.
+    """
+
+    top: int = 20
+    grad_accum: int = 1
+
+
+#: kind -> settings dataclass (None => free-form mapping, e.g. sweep specs).
+SETTINGS_SCHEMAS: Dict[str, Optional[Type]] = {
+    "train": TrainSettings,
+    "dryrun": DryrunSettings,
+    "serve": ServeSettings,
+    "trace": TraceSettings,
+    "sweep": None,
+}
+
+KINDS = tuple(SETTINGS_SCHEMAS)
+
+_RUN_KEYS = {"kind", "name", "output_dir"}
+
+
+def register_run_settings(kind: str, settings_cls: Optional[Type]) -> None:
+    """Add a new run kind's settings schema (new kinds are a registry entry
+    plus this schema — no new script)."""
+    SETTINGS_SCHEMAS[kind] = settings_cls
+
+
+def _coerce_settings(kind: str, section: Any) -> Any:
+    cls = SETTINGS_SCHEMAS[kind]
+    section = section or {}
+    if not isinstance(section, dict):
+        raise RunError(f"run.{kind} settings must be a mapping, "
+                       f"got {type(section).__name__}")
+    if cls is None:
+        return dict(section)
+    fields = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(section) - fields
+    if unknown:
+        raise RunError(f"run.{kind}: unknown settings {sorted(unknown)}; "
+                       f"accepted: {sorted(fields)}")
+    try:
+        return cls(**section)
+    except TypeError as e:
+        raise RunError(f"run.{kind}: {e}") from e
+
+
+# ---------------------------------------------------------------------------
+# the parsed document
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class RunConfig:
+    """A validated, normalized run document."""
+
+    kind: str
+    name: str
+    output_dir: str
+    settings: Any                 # typed dataclass (or dict for sweep)
+    graph: Dict[str, Any]         # component graph (incl. ``variables``)
+    doc: Dict[str, Any]           # the full normalized document
+    config_dir: str = "."        # base dir for relative paths (sweep base_config)
+
+    def settings_dict(self) -> Dict[str, Any]:
+        if dataclasses.is_dataclass(self.settings):
+            return dataclasses.asdict(self.settings)
+        return dict(self.settings)
+
+
+def _infer_kind(doc: Dict[str, Any]) -> Optional[str]:
+    """Classify a legacy document with no ``run:`` section."""
+    if "sweep" in doc or "axes" in doc or "base" in doc or "base_config" in doc:
+        return "sweep"
+    if "gym" in doc:
+        return "train"
+    return None
+
+
+def parse_run_doc(doc: Dict[str, Any], *, kind: Optional[str] = None,
+                  default_name: str = "run",
+                  config_dir: str = ".") -> RunConfig:
+    """Parse (and normalize) a run document.
+
+    ``kind`` is the CLI subcommand, if any: it supplies the kind for legacy
+    documents and must agree with an explicit ``run.kind``.
+    """
+    if not isinstance(doc, dict):
+        raise RunError("run document must be a mapping")
+    doc = dict(doc)
+
+    run_sec = doc.pop("run", None)
+    if run_sec is None:
+        inferred = _infer_kind(doc)
+        doc_kind = kind or inferred
+        if doc_kind is None:
+            raise RunError(
+                "document has no 'run:' section and its kind cannot be "
+                "inferred; add `run: {kind: ...}` or use a kind subcommand"
+            )
+        run_sec = {"kind": doc_kind}
+        if doc_kind == "sweep" and kind not in (None, "sweep"):
+            raise RunError(f"document is a sweep spec but was launched as "
+                           f"{kind!r}")
+    if not isinstance(run_sec, dict):
+        raise RunError("'run' section must be a mapping")
+    run_sec = dict(run_sec)
+
+    doc_kind = run_sec.get("kind")
+    if doc_kind is None:
+        if kind is None:
+            raise RunError("run section missing 'kind' "
+                           f"(one of {sorted(SETTINGS_SCHEMAS)})")
+        doc_kind = kind
+    if doc_kind not in SETTINGS_SCHEMAS:
+        raise RunError(f"unknown run kind {doc_kind!r}; "
+                       f"expected one of {sorted(SETTINGS_SCHEMAS)}")
+    if kind is not None and kind != doc_kind:
+        raise RunError(f"document declares kind {doc_kind!r} but was "
+                       f"launched as {kind!r}")
+
+    allowed = _RUN_KEYS | set(SETTINGS_SCHEMAS)
+    unknown = set(run_sec) - allowed
+    if unknown:
+        raise RunError(f"run section has unknown keys {sorted(unknown)}; "
+                       f"allowed: {sorted(allowed)}")
+    foreign = (set(run_sec) & set(SETTINGS_SCHEMAS)) - {doc_kind}
+    if foreign:
+        raise RunError(f"run section has settings for other kinds "
+                       f"{sorted(foreign)}; only run.{doc_kind} applies")
+
+    name = str(run_sec.get("name") or default_name)
+    settings = _coerce_settings(doc_kind, run_sec.get(doc_kind))
+
+    graph = doc  # whatever is not the run section is the component graph
+    if doc_kind == "sweep":
+        # the sweep spec may live in run.sweep or as the document body
+        sweep_doc = run_sec.get("sweep") or graph
+        if not sweep_doc:
+            raise RunError("sweep run has no sweep spec (run.sweep section "
+                           "or document body)")
+        settings = dict(sweep_doc)
+
+    output_dir = run_sec.get("output_dir")
+    if not output_dir and doc_kind == "sweep":
+        # keep the sweep subsystem's historic default directory layout
+        body = settings.get("sweep", settings)
+        output_dir = body.get("output_dir") or os.path.join(
+            "results", "sweeps", str(body.get("name") or name))
+    if not output_dir:
+        output_dir = os.path.join("results", "runs", name)
+
+    normalized_run: Dict[str, Any] = {"kind": doc_kind, "name": name,
+                                      "output_dir": output_dir}
+    if doc_kind == "sweep":
+        if run_sec.get("sweep"):
+            normalized_run["sweep"] = dict(run_sec["sweep"])
+    elif dataclasses.is_dataclass(settings):
+        normalized_run[doc_kind] = dataclasses.asdict(settings)
+    elif settings:  # schema-less kind: keep whatever mapping was given
+        normalized_run[doc_kind] = dict(settings)
+    normalized_doc = {"run": normalized_run, **graph}
+
+    return RunConfig(kind=doc_kind, name=name, output_dir=str(output_dir),
+                     settings=settings, graph=graph, doc=normalized_doc,
+                     config_dir=config_dir)

@@ -1,0 +1,235 @@
+"""The built-in run kinds, registered as components (``run_kind`` key).
+
+Each kind is a :class:`RunKind`: a settings schema plus an executor taking a
+:class:`repro.run.api.RunContext`.  New workloads (eval, data-prep, export)
+register here at runtime — a registry entry plus a YAML schema, no new
+script::
+
+    register_run_kind("eval", EvalSettings, execute_eval)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Type
+
+from ..config.registry import DEFAULT_REGISTRY as REG
+from .config import (
+    DryrunSettings,
+    RunError,
+    ServeSettings,
+    TraceSettings,
+    TrainSettings,
+    register_run_settings,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RunKind:
+    """A registered workload: settings schema + executor."""
+
+    kind: str
+    settings_cls: Optional[Type]
+    execute: Callable[..., Dict[str, Any]]
+
+
+def register_run_kind(kind: str, settings_cls: Optional[Type],
+                      execute: Callable[..., Dict[str, Any]]) -> RunKind:
+    obj = RunKind(kind, settings_cls, execute)
+    register_run_settings(kind, settings_cls)
+    REG.register("run_kind", kind, (lambda o: (lambda: o))(obj), RunKind)
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _resolve_graph(ctx) -> Dict[str, Any]:
+    from ..config.resolver import resolve_config
+
+    return resolve_config(ctx.cfg.graph, ctx.registry)
+
+
+def _graph_get(graph: Dict[str, Any], key: str, what: str) -> Any:
+    if key not in graph:
+        raise RunError(f"{what} run needs a top-level {key!r} entry in its "
+                       f"component graph; available: {sorted(graph)}")
+    return graph[key]
+
+
+def _loader_tokens(gym, steps: int) -> Optional[int]:
+    loader = getattr(gym, "loader", None)
+    gb = getattr(loader, "global_batch", None)
+    seq = getattr(getattr(loader, "dataset", None), "seq_len", None)
+    if gb is None or seq is None:
+        return None
+    return steps * gb * seq
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+def execute_train(ctx) -> Dict[str, Any]:
+    s: TrainSettings = ctx.cfg.settings
+    graph = _resolve_graph(ctx)
+    if s.gym_key not in graph:
+        raise RunError(f"resolved config has no {s.gym_key!r} entry; "
+                       f"top-level entries: {sorted(graph)}")
+    gym = graph[s.gym_key]
+    state = gym.setup()
+    if s.resume and gym.ckpt_dir:
+        from ..train.checkpoint import latest_checkpoint, restore_checkpoint
+
+        latest = latest_checkpoint(gym.ckpt_dir)
+        if latest:
+            ctx.log(f"resuming from step {latest[0]}")
+            state = restore_checkpoint(state, latest[1])
+    t0 = time.time()
+    out = gym.run(s.steps, state=state)
+    wall = time.time() - t0
+    hist = out["history"]
+    result: Dict[str, Any] = {
+        "steps": s.steps,
+        "wall_s": round(wall, 2),
+        "logged_points": len(hist),
+        "history": hist,
+    }
+    if hist:  # steps < log_every yields an empty history — that is not an error
+        result["first_loss"] = float(hist[0]["loss"])
+        result["final_loss"] = float(hist[-1]["loss"])
+    tokens = _loader_tokens(gym, s.steps)
+    if tokens is not None:
+        result["tokens_per_s"] = int(tokens / wall) if wall > 0 else 0
+    return result
+
+
+# ---------------------------------------------------------------------------
+# dryrun / trace
+# ---------------------------------------------------------------------------
+def _compile_components(ctx, grad_accum: int, keep_messages: bool,
+                        verbose: bool) -> Dict[str, Any]:
+    graph = _resolve_graph(ctx)
+    cfg = _graph_get(graph, "arch", ctx.cfg.kind)
+    shape = _graph_get(graph, "shape", ctx.cfg.kind)
+    provider = graph.get("mesh")
+    if provider is None:
+        provider = ctx.registry.build("mesh_provider", "production")
+    plan = graph.get("plan")
+    precision = graph.get("precision")
+    from ..launch.dryrun import compile_run
+
+    # the provider passes through un-built: compile_run only constructs the
+    # mesh once the skip check has passed (skipped combos touch no devices)
+    return compile_run(
+        cfg, shape, provider, plan,
+        grad_accum=grad_accum,
+        bf16_params=bool(getattr(precision, "bf16_params", False)),
+        serve_bf16=bool(getattr(precision, "serve_bf16", False)),
+        keep_messages=keep_messages,
+        verbose=verbose,
+    )
+
+
+def execute_dryrun(ctx) -> Dict[str, Any]:
+    s: DryrunSettings = ctx.cfg.settings
+    return _compile_components(ctx, s.grad_accum, keep_messages=False,
+                               verbose=bool(ctx.options.get("verbose")))
+
+
+def execute_trace(ctx) -> Dict[str, Any]:
+    s: TraceSettings = ctx.cfg.settings
+    res = _compile_components(ctx, s.grad_accum, keep_messages=True,
+                              verbose=False)
+    if "skipped" in res:
+        ctx.log(f"skipped: {res['skipped']}")
+        return res
+    from ..launch.trace import format_schedule
+
+    text = format_schedule(res, top=s.top)
+    ctx.log(text)
+    res.pop("messages", None)
+    res["schedule"] = text
+    return res
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+def execute_serve(ctx) -> Dict[str, Any]:
+    s: ServeSettings = ctx.cfg.settings
+    graph = _resolve_graph(ctx)
+    model = graph.get("model")
+    if model is None:
+        from ..models import build_model
+
+        model = build_model(_graph_get(graph, "arch", "serve"))
+    from ..launch.serve import serve_benchmark
+
+    return serve_benchmark(model, batch=s.batch, prompt_len=s.prompt_len,
+                           gen=s.gen, ckpt=s.ckpt, seed=s.seed, log=ctx.log)
+
+
+# ---------------------------------------------------------------------------
+# sweep
+# ---------------------------------------------------------------------------
+def build_sweep_spec(cfg, output_dir_override: str = ""):
+    """The one place a run config becomes a SweepSpec (CLI + executor)."""
+    from ..sweep.spec import SweepSpec
+
+    spec = SweepSpec.from_dict(cfg.settings, config_dir=cfg.config_dir)
+    if spec.name == "sweep" and cfg.name != "run":
+        spec.name = cfg.name
+    if output_dir_override:
+        spec.output_dir = output_dir_override
+    elif not spec.output_dir:
+        spec.output_dir = cfg.output_dir
+    return spec
+
+
+def execute_sweep(ctx) -> Dict[str, Any]:
+    from ..sweep.report import load_records, write_report
+    from ..sweep.runner import SweepRunner
+
+    spec = build_sweep_spec(ctx.cfg, ctx.options.get("output_dir", ""))
+    trials = spec.trials()
+    ctx.log(f"sweep {spec.name!r}: {len(trials)} trials -> {spec.output_dir}")
+    runner = SweepRunner(spec, log=ctx.log)
+    records = runner.run(resume=not ctx.options.get("redo", False),
+                         max_trials=int(ctx.options.get("max_trials", 0)))
+    n_resumed = sum(1 for r in records if r.get("resumed"))
+    n_failed = sum(1 for r in records if r.get("status") == "failed")
+    ctx.log(f"done: {len(records)} records ({n_resumed} resumed, "
+            f"{n_failed} failed)")
+    summary = write_report(spec, load_records(spec.output_dir))
+    return {
+        "sweep": spec.name,
+        "backend": spec.backend,
+        "objective_metric": spec.objective_metric,
+        "objective_mode": spec.objective_mode,
+        "n_trials": len(trials),
+        "n_records": len(records),
+        "n_resumed": n_resumed,
+        "n_failed": n_failed,
+        "best": summary.get("best"),
+        "report": f"{spec.output_dir}/report.json",
+        "sweep_output_dir": spec.output_dir,
+    }
+
+
+# ---------------------------------------------------------------------------
+_REGISTERED = False
+
+
+def register_builtin_kinds() -> None:
+    global _REGISTERED
+    if _REGISTERED:
+        return
+    _REGISTERED = True
+    register_run_kind("train", TrainSettings, execute_train)
+    register_run_kind("dryrun", DryrunSettings, execute_dryrun)
+    register_run_kind("serve", ServeSettings, execute_serve)
+    register_run_kind("trace", TraceSettings, execute_trace)
+    register_run_kind("sweep", None, execute_sweep)
+
+
+register_builtin_kinds()

@@ -1,0 +1,45 @@
+"""``--set path=value`` overrides applied to the raw run document.
+
+Paths are the sweep subsystem's dotted patch syntax (``a.b.0.c`` — integer
+segments index lists); values are parsed as YAML, so ``--set run.train.steps=20``
+yields an int and ``--set gym.config.tracker=null`` a None.  Missing
+intermediate keys are an error (a typo, not an override); a missing *final*
+dict key is created, so component defaults can be overridden even when the
+YAML omits them.
+"""
+from __future__ import annotations
+
+import copy
+from typing import Any, Dict, List, Sequence, Tuple
+
+from ..sweep.spec import SweepError, set_path
+from .config import RunError
+
+
+def parse_overrides(pairs: Sequence[str]) -> List[Tuple[str, Any]]:
+    """Parse ``path=value`` strings; the value goes through YAML."""
+    import yaml
+
+    out: List[Tuple[str, Any]] = []
+    for pair in pairs:
+        path, sep, raw = pair.partition("=")
+        if not sep or not path:
+            raise RunError(f"--set expects path=value, got {pair!r}")
+        try:
+            value = yaml.safe_load(raw) if raw != "" else ""
+        except yaml.YAMLError:
+            value = raw
+        out.append((path, value))
+    return out
+
+
+def apply_overrides(doc: Dict[str, Any],
+                    overrides: Sequence[Tuple[str, Any]]) -> Dict[str, Any]:
+    """Deep-copy ``doc`` and apply every ``(path, value)`` override."""
+    doc = copy.deepcopy(doc)
+    for path, value in overrides:
+        try:
+            set_path(doc, path, value, create_missing=True)
+        except SweepError as e:
+            raise RunError(f"--set {path}: {e}") from e
+    return doc

@@ -24,37 +24,36 @@ SPEC_FILE = "spec.json"
 
 
 # ---------------------------------------------------------------------------
-# backends
+# backends — both drive the declarative Run API (repro.run), so every trial
+# materializes a replayable resolved-config + fingerprint artifact under
+# <output_dir>/trials/<trial_id>/.
 # ---------------------------------------------------------------------------
-def _gym_backend(spec: SweepSpec) -> Callable[[Dict[str, Any]], Dict[str, Any]]:
-    """Resolve the patched graph and train ``spec.steps`` steps."""
-    import repro.core.components  # noqa: F401  (populates the registry)
-    from ..config.resolver import resolve_config
+def _trial_location(spec: SweepSpec, trial: Optional[Trial]):
+    """(run name, artifact dir) for one trial; empty => in-memory only."""
+    if trial is None or not spec.output_dir:
+        return "", ""
+    return trial.trial_id, os.path.join(spec.output_dir, "trials",
+                                        trial.trial_id)
 
-    def run(raw: Dict[str, Any]) -> Dict[str, Any]:
-        graph = resolve_config(raw)
-        if spec.gym_key not in graph:
-            from .spec import SweepError
 
-            raise SweepError(
-                f"resolved config has no {spec.gym_key!r} entry; "
-                f"top-level entries: {sorted(graph)}"
-            )
-        gym = graph[spec.gym_key]
-        t0 = time.time()
-        out = gym.run(steps=spec.steps)
-        wall = time.time() - t0
-        hist = out["history"]
-        loader = gym.loader
-        tokens = spec.steps * loader.global_batch * loader.dataset.seq_len
+def _gym_backend(spec: SweepSpec) -> Callable[..., Dict[str, Any]]:
+    """Patch -> train run document -> Run API (``spec.steps`` steps)."""
+    from ..run import api as run_api
+    from ..run.legacy import legacy_train_doc
+
+    def run(raw: Dict[str, Any], trial: Optional[Trial] = None) -> Dict[str, Any]:
+        name, out_dir = _trial_location(spec, trial)
+        doc = legacy_train_doc(raw, steps=spec.steps, gym_key=spec.gym_key,
+                               name=name, output_dir=out_dir)
+        result = run_api.execute_doc(doc, write_files=bool(out_dir))
         return {
-            "final_loss": float(hist[-1]["loss"]),
-            "first_loss": float(hist[0]["loss"]),
-            "tokens_per_s": int(tokens / wall) if wall > 0 else 0,
-            "steps": spec.steps,
-            "wall_s": round(wall, 2),
+            key: result[key]
+            for key in ("final_loss", "first_loss", "tokens_per_s", "steps",
+                        "wall_s")
+            if key in result
         }
 
+    run.accepts_trial = True
     return run
 
 
@@ -67,23 +66,40 @@ _DRYRUN_KEEP = (
 )
 
 
-def _dryrun_backend(spec: SweepSpec) -> Callable[[Dict[str, Any]], Dict[str, Any]]:
+def _dryrun_backend(spec: SweepSpec) -> Callable[..., Dict[str, Any]]:
     """Compile the trial on placeholder devices and report roofline terms.
 
-    The base config is the ``dryrun()`` kwarg mapping (``arch``, ``shape``
-    plus any of ``plan_name``, ``scan_block``, ``multi_pod``, ...); patch
-    paths are those flat keys.
+    The base config is either a full dryrun *run document* (``run:`` section
+    plus ``arch``/``shape``/``mesh``/``plan``/``precision`` component graph)
+    or the historic flat ``dryrun()`` kwarg mapping (``arch``, ``shape`` plus
+    any of ``plan_name``, ``scan_block``, ``multi_pod``, ...), which is
+    converted to a run document per trial; patch paths address whichever form
+    the base uses.
     """
+    import copy
+
     os.environ.setdefault(
         "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
     )
-    from ..launch.dryrun import dryrun
+    from ..run import api as run_api
+    from ..run.legacy import legacy_dryrun_doc
 
-    def run(raw: Dict[str, Any]) -> Dict[str, Any]:
-        kwargs = dict(raw)
-        arch = kwargs.pop("arch")
-        shape = kwargs.pop("shape")
-        res = dryrun(arch, shape, verbose=False, **kwargs)
+    def run(raw: Dict[str, Any], trial: Optional[Trial] = None) -> Dict[str, Any]:
+        name, out_dir = _trial_location(spec, trial)
+        if "run" in raw:
+            doc = copy.deepcopy(raw)
+            run_sec = dict(doc.get("run") or {})
+            run_sec["kind"] = "dryrun"
+            if name:
+                run_sec["name"] = name
+            if out_dir:
+                run_sec["output_dir"] = out_dir
+            doc["run"] = run_sec
+        else:
+            doc = legacy_dryrun_doc(raw, name=name)
+            if out_dir:
+                doc["run"]["output_dir"] = out_dir
+        res = run_api.execute_doc(doc, write_files=bool(out_dir))
         if "skipped" in res:
             return {"skipped": res["skipped"]}
         metrics = {k: res[k] for k in _DRYRUN_KEEP if k in res}
@@ -93,6 +109,7 @@ def _dryrun_backend(spec: SweepSpec) -> Callable[[Dict[str, Any]], Dict[str, Any
         )
         return metrics
 
+    run.accepts_trial = True
     return run
 
 
@@ -202,9 +219,15 @@ class SweepRunner:
             "seed": trial.seed,
             "backend": spec.backend,
         }
+        _, run_dir = _trial_location(spec, trial)
+        if run_dir and getattr(backend, "accepts_trial", False):
+            record["run_dir"] = os.path.join("trials", trial.trial_id)
         t0 = time.time()
         try:
-            metrics = backend(spec.trial_config(trial))
+            if getattr(backend, "accepts_trial", False):
+                metrics = backend(spec.trial_config(trial), trial=trial)
+            else:  # historic single-argument backends (tests, plugins)
+                metrics = backend(spec.trial_config(trial))
             if "skipped" in metrics:
                 record["status"] = "skipped"
                 record["skip_reason"] = metrics["skipped"]

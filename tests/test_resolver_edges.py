@@ -1,0 +1,134 @@
+"""Resolver edge cases the Run API leans on: ${var} interpolation inside
+lists and nested component configs, reference cycles through list elements,
+and the validate-only walk behind `python -m repro validate`."""
+import pytest
+
+import repro.core.components  # noqa: F401  (populates the registry)
+from repro.config.registry import Registry
+from repro.config.resolver import (
+    ConfigError,
+    resolve_config,
+    validate_config,
+)
+
+
+def _reg():
+    reg = Registry()
+    reg.register("box", "list", lambda items: list(items))
+    reg.register("box", "pair", lambda a, b=0: (a, b))
+    return reg
+
+
+# ---------------------------------------------------------------------------
+# ${var} interpolation in lists and nested component configs
+# ---------------------------------------------------------------------------
+def test_interpolation_inside_lists():
+    raw = {
+        "variables": {"x": 3, "name": "abc"},
+        "vals": ["${x}", "prefix-${name}", ["${x}", "${x}"]],
+    }
+    out = resolve_config(raw, _reg())
+    assert out["vals"] == [3, "prefix-abc", [3, 3]]
+
+
+def test_interpolation_inside_nested_component_config():
+    raw = {
+        "variables": {"x": 7},
+        "outer": {"component_key": "box", "variant_key": "pair",
+                  "config": {"a": {"component_key": "box", "variant_key": "list",
+                                   "config": {"items": ["${x}", "${x}"]}},
+                             "b": "${x}"}},
+    }
+    out = resolve_config(raw, _reg())
+    assert out["outer"] == ([7, 7], 7)
+
+
+def test_undefined_variable_inside_list_flagged():
+    raw = {"vals": [1, "${missing}"]}
+    with pytest.raises(ConfigError, match="undefined variable"):
+        resolve_config(raw, _reg())
+
+
+def test_mixed_string_interpolation_coerces_to_str():
+    raw = {"variables": {"n": 4}, "v": "n=${n}"}
+    assert resolve_config(raw, _reg())["v"] == "n=4"
+
+
+# ---------------------------------------------------------------------------
+# reference cycles through list elements
+# ---------------------------------------------------------------------------
+def test_cycle_through_list_element_detected():
+    reg = _reg()
+    raw = {
+        "a": {"component_key": "box", "variant_key": "list",
+              "config": {"items": [{"instance_key": "b"}]}},
+        "b": {"component_key": "box", "variant_key": "list",
+              "config": {"items": [1, {"instance_key": "a"}]}},
+    }
+    with pytest.raises(ConfigError, match="cyclic"):
+        resolve_config(raw, reg)
+    with pytest.raises(ConfigError, match="cyclic"):
+        validate_config(raw, reg)
+
+
+def test_self_cycle_in_plain_list_detected():
+    raw = {"xs": [{"instance_key": "xs"}]}
+    with pytest.raises(ConfigError, match="cyclic"):
+        resolve_config(raw, _reg())
+
+
+def test_diamond_reference_through_lists_is_shared_not_cyclic():
+    reg = _reg()
+    raw = {
+        "leaf": {"component_key": "box", "variant_key": "list",
+                 "config": {"items": [1, 2]}},
+        "both": {"component_key": "box", "variant_key": "pair",
+                 "config": {"a": [{"instance_key": "leaf"}],
+                            "b": {"instance_key": "leaf"}}},
+    }
+    out = resolve_config(raw, reg)
+    assert out["both"][0][0] is out["both"][1]  # one shared instance
+    validate_config(raw, reg)  # and the validator accepts it
+
+
+# ---------------------------------------------------------------------------
+# validate-only walk (no factories run)
+# ---------------------------------------------------------------------------
+def test_validate_counts_without_building():
+    calls = []
+    reg = Registry()
+    reg.register("probe", "x", lambda n=1: calls.append(n))
+    raw = {"p": {"component_key": "probe", "variant_key": "x",
+                 "config": {"n": 3}},
+           "q": {"component_key": "probe", "variant_key": "x"}}
+    counts = validate_config(raw, reg)
+    assert counts == {"components": 2, "top_level": 2}
+    assert calls == [], "validate must not invoke factories"
+
+
+def test_validate_flags_unknown_variant_and_keys():
+    reg = _reg()
+    with pytest.raises(ConfigError, match="unknown variant"):
+        validate_config({"p": {"component_key": "box", "variant_key": "cube"}},
+                        reg)
+    with pytest.raises(ConfigError, match="unexpected config keys"):
+        validate_config({"p": {"component_key": "box", "variant_key": "pair",
+                               "config": {"a": 1, "z": 2}}}, reg)
+    with pytest.raises(ConfigError, match="missing required"):
+        validate_config({"p": {"component_key": "box", "variant_key": "pair",
+                               "config": {}}}, reg)
+
+
+def test_validate_flags_unknown_reference_target():
+    with pytest.raises(ConfigError, match="unknown top-level entry"):
+        validate_config({"p": [{"instance_key": "ghost"}]}, _reg())
+
+
+def test_validate_checks_nested_component_configs():
+    reg = _reg()
+    raw = {"outer": {"component_key": "box", "variant_key": "list",
+                     "config": {"items": [
+                         {"component_key": "box", "variant_key": "pair",
+                          "config": {"typo": 1}}]}}}
+    with pytest.raises(ConfigError, match="unexpected config keys"):
+        validate_config(raw, reg)
