@@ -17,48 +17,48 @@ import textwrap
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# one timing implementation: the measured rows drive the `bench` run kind
+# (Gym.bench) on a declarative run doc instead of a hand-rolled step loop
 _MEASURE = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
-    import json, sys, time
+    import json, sys
     sys.path.insert(0, {src!r})
-    import jax, jax.numpy as jnp
-    from repro.configs import get_reduced
-    from repro.models import build_model
-    from repro.optim.adamw import AdamW
-    from repro.sharding import plans as PL
-    from repro.train import steps as ST
-    from repro.launch.mesh import make_local_mesh
+    from repro.run.api import execute_doc
 
-    cfg = get_reduced("stablelm_1p6b").with_(n_layers=2)
-    model = build_model(cfg)
-    opt = AdamW(lr=1e-3)
-    mesh = make_local_mesh(dp={ndev}, tp=1)
-    plan = PL.make_plan("ddp")
-    ctx = PL.mesh_context(plan, mesh)
-    rng = jax.random.PRNGKey(0)
-    B, S = {ndev} * 4, 128
-    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab)
-    batch = {{"tokens": toks, "labels": jnp.roll(toks, -1, 1)}}
-    pshapes = jax.eval_shape(model.init, rng)
-    pspecs, _ = PL.param_shardings(plan, mesh, pshapes, model.param_axes())
-    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
-    state_sh = {{"params": pspecs, "opt": {{"m": pspecs, "v": pspecs,
-                "count": rep}}, "step": rep}}
-    with mesh:
-        state = jax.jit(lambda r: ST.init_train_state(model, opt, r),
-                        out_shardings=state_sh)(rng)
-        step = jax.jit(ST.make_train_step(model, opt, ctx),
-                       in_shardings=(state_sh, None))
-        state, _ = step(state, batch)  # compile
-        jax.block_until_ready(state["params"])
-        t0 = time.time()
-        for _ in range(5):
-            state, m = step(state, batch)
-        jax.block_until_ready(state["params"])
-        dt = (time.time() - t0) / 5
-    print(json.dumps({{"ndev": {ndev}, "step_s": dt,
-                       "tokens_per_s": B * S / dt}}))
+    ndev = {ndev}
+    B, S = ndev * 4, 128
+    doc = {{
+        "run": {{"kind": "bench", "name": f"fig2b_{{ndev}}dev",
+                 "output_dir": f"/tmp/repro_fig2b_{{ndev}}dev",
+                 "bench": {{"steps": 5, "warmup": 1, "bench_dir": ""}}}},
+        "arch": {{"component_key": "arch_config", "variant_key": "stablelm_1p6b",
+                  "config": {{"reduced": True, "n_layers": 2}}}},
+        "model": {{"component_key": "model", "variant_key": "auto",
+                   "config": {{"arch_config": {{"instance_key": "arch"}}}}}},
+        "optimizer": {{"component_key": "optimizer", "variant_key": "adamw",
+                       "config": {{"lr": 0.001}}}},
+        "dataset": {{"component_key": "dataset", "variant_key": "synthetic",
+                     "config": {{"n_tokens": B * (S + 1) * 16, "vocab": 512,
+                                 "prefix": f"/tmp/repro_fig2b_data_{{ndev}}",
+                                 "seq_len": S}}}},
+        "loader": {{"component_key": "loader", "variant_key": "sharded",
+                    "config": {{"dataset": {{"instance_key": "dataset"}},
+                                "global_batch": B}}}},
+        "mesh": {{"component_key": "mesh_provider", "variant_key": "local",
+                  "config": {{"dp": ndev, "tp": 1}}}},
+        "plan": {{"component_key": "sharding_plan", "variant_key": "ddp"}},
+        "gym": {{"component_key": "gym", "variant_key": "standard",
+                 "config": {{"model": {{"instance_key": "model"}},
+                             "optimizer": {{"instance_key": "optimizer"}},
+                             "loader": {{"instance_key": "loader"}},
+                             "mesh_provider": {{"instance_key": "mesh"}},
+                             "sharding_plan": {{"instance_key": "plan"}}}}}},
+    }}
+    res = execute_doc(doc, write_files=False)
+    dt = res["steady_step_ms"] / 1000.0
+    print(json.dumps({{"ndev": ndev, "step_s": dt,
+                       "tokens_per_s": res["tokens_per_s"]}}))
 """)
 
 

@@ -1,0 +1,21 @@
+"""Version-compat shims for the pinned accelerator stack.
+
+``jax.shard_map`` only exists on newer JAX; on the baked-in 0.4.x toolchain
+the public API lives at ``jax.experimental.shard_map.shard_map`` with the
+replication check spelled ``check_rep`` instead of ``check_vma``. Every
+shard_map call site in the repo routes through here.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as sm_experimental
+
+    return sm_experimental(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_rep=check_vma)

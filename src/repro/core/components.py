@@ -10,11 +10,13 @@ from ..config.registry import DEFAULT_REGISTRY as REG
 from ..configs import ARCH_IDS, get_config, get_reduced, reduce_config
 from ..configs.shapes import SHAPES, InputShape
 from ..data.packed_dataset import ChunkedLMDataset, PackedDataset, ShardedLoader, synthetic_dataset
+from ..data.prefetch import PrefetchLoader
 from ..data.tokenizer import BpeTokenizer, ByteTokenizer
 from ..launch import mesh as MESH
 from ..launch.specs import PrecisionPolicy
 from ..models import build_model
 from ..models.base import ArchConfig, MLAConfig, MoEConfig, SSMConfig, Model
+from ..models.stacked import REMAT_VARIANTS, RematPolicy
 from ..optim import schedules as SCHED
 from ..optim.adamw import AdamW
 from ..sharding.plans import ShardingPlan, make_plan
@@ -29,6 +31,7 @@ IF.TokenizerIF.register(ByteTokenizer)
 IF.TokenizerIF.register(BpeTokenizer)
 IF.DatasetIF.register(ChunkedLMDataset)
 IF.LoaderIF.register(ShardedLoader)
+IF.LoaderIF.register(PrefetchLoader)
 IF.MeshProviderIF.register(MESH.MeshProvider)
 
 _REGISTERED = False
@@ -108,6 +111,15 @@ def register_all() -> None:
          lambda dataset, global_batch, dp_rank=0, dp_size=1:
          ShardedLoader(dataset, global_batch, dp_rank, dp_size),
          IF.LoaderIF)
+    _reg("loader", "prefetch",
+         lambda loader, depth=2, to_device=True:
+         PrefetchLoader(loader, depth=depth, to_device=to_device),
+         IF.LoaderIF)
+
+    # -- remat policies (scan-over-layers activation checkpointing) ----------
+    for name in REMAT_VARIANTS:
+        _reg("remat_policy", name,
+             (lambda n: (lambda: RematPolicy(n)))(name), RematPolicy)
 
     # -- evaluators ---------------------------------------------------------------
     from .evaluator import PerplexityEvaluator
@@ -125,12 +137,12 @@ def register_all() -> None:
     _reg("gym", "standard",
          lambda model, optimizer, loader, mesh_provider=None, sharding_plan=None,
                 seed=0, grad_accum=1, log_every=10, eval_every=0, ckpt_every=0,
-                ckpt_dir="", tracker=None:
+                ckpt_dir="", prefetch=2, tracker=None:
          Gym(model=model, optimizer=optimizer, loader=loader,
              mesh=_build_mesh(mesh_provider),
              plan=sharding_plan, seed=seed, grad_accum=grad_accum,
              log_every=log_every, eval_every=eval_every, ckpt_every=ckpt_every,
-             ckpt_dir=ckpt_dir, logger=tracker),
+             ckpt_dir=ckpt_dir, prefetch=prefetch, logger=tracker),
          Gym)
 
 

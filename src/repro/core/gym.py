@@ -2,7 +2,13 @@
 
 The resolved object graph — model, optimizer, sharding plan, loader,
 checkpointer, trackers — is injected; the gym only drives the loop. It owns
-no architecture- or strategy-specific logic (that's the whole point)."""
+no architecture- or strategy-specific logic (that's the whole point).
+
+Hot-path notes: the loader is wrapped in a :class:`PrefetchLoader` (a
+background thread keeps the next ``prefetch`` batches on device, sharded per
+the plan), and metrics stay on device between log points — one
+``jax.device_get`` per ``log_every`` window, flushed one window late so the
+fetch never blocks dispatch of the current step."""
 from __future__ import annotations
 
 import dataclasses
@@ -10,13 +16,11 @@ import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
-import numpy as np
 
-from ..models import base as B
-from ..optim.adamw import AdamW
+from ..data.prefetch import PrefetchLoader
 from ..sharding import plans as PL
-from ..train import steps as ST
 from ..train import checkpoint as CK
+from ..train import steps as ST
 
 
 @dataclasses.dataclass
@@ -32,6 +36,7 @@ class Gym:
     eval_every: int = 0
     ckpt_every: int = 0
     ckpt_dir: str = ""
+    prefetch: int = 2                     # device-prefetch depth (0 = sync)
     eval_fn: Optional[Callable] = None
     logger: Optional[Callable[[Dict[str, Any]], None]] = None
 
@@ -52,9 +57,10 @@ class Gym:
                 self.plan, self.mesh, pshapes, self.model.param_axes()
             )
             rep = jax.sharding.NamedSharding(self.mesh, jax.sharding.PartitionSpec())
+            opt_shapes = jax.eval_shape(self.optimizer.init, pshapes)
             state_sh = {
                 "params": pspecs,
-                "opt": {"m": pspecs, "v": pspecs, "count": rep},
+                "opt": ST.opt_state_shardings(opt_shapes, pspecs, rep),
                 "step": rep,
             }
             self._step = jax.jit(step_fn, in_shardings=(state_sh, None),
@@ -73,31 +79,120 @@ class Gym:
             )
         return state
 
+    # -- input pipeline ----------------------------------------------------
+    def _batch_shardings(self, batch):
+        shapes = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), batch
+        )
+        return PL.batch_shardings(self.plan, self.mesh, shapes)
+
+    def _wrapped_loader(self):
+        """The loader the loop actually drains: async device prefetch unless
+        disabled or the injected loader already prefetches."""
+        shardings = (self._batch_shardings
+                     if self.mesh is not None and self.plan is not None
+                     else None)
+        if isinstance(self.loader, PrefetchLoader):
+            # a YAML-wired loader/prefetch component knows nothing about the
+            # mesh: drain a per-gym COPY carrying the plan's batch shardings
+            # (the shared component instance is never mutated)
+            if (self.loader.to_device and self.loader.shardings is None
+                    and shardings is not None):
+                return dataclasses.replace(self.loader, shardings=shardings)
+            return self.loader
+        if self.prefetch <= 0:
+            return self.loader
+        return PrefetchLoader(self.loader, depth=self.prefetch,
+                              shardings=shardings)
+
+    # -- training ----------------------------------------------------------
     def run(self, steps: int, state=None) -> Dict[str, Any]:
         if state is None:
             state = self.setup()
         start = int(state["step"])
         history: List[Dict[str, Any]] = []
         t0 = time.time()
+        pending: List[tuple] = []  # (step, device metrics, wall_s at dispatch)
+
+        def flush():
+            if not pending:
+                return
+            fetched = jax.device_get([m for _, m, _ in pending])
+            for (step, _, wall), vals in zip(pending, fetched):
+                m = {k: float(v) for k, v in vals.items()}
+                m["step"] = step
+                m["wall_s"] = wall
+                history.append(m)
+                if self.logger:
+                    self.logger(m)
+            pending.clear()
+
         ctx = self.mesh if self.mesh is not None else _nullctx()
         with ctx:
-            for i, batch in enumerate(self.loader.batches(steps, start_step=start)):
+            loader = self._wrapped_loader()
+            for i, batch in enumerate(loader.batches(steps, start_step=start)):
                 state, metrics = self._step(state, batch)
                 step = start + i + 1
                 if self.log_every and (step % self.log_every == 0 or i == 0):
-                    m = {k: float(v) for k, v in metrics.items()}
-                    m["step"] = step
-                    m["wall_s"] = round(time.time() - t0, 2)
-                    history.append(m)
-                    if self.logger:
-                        self.logger(m)
+                    # fetch the PREVIOUS window now (long since computed —
+                    # a cheap transfer), stash the current one: dispatch of
+                    # the next step is never blocked on this step's metrics
+                    flush()
+                    pending.append((step, metrics,
+                                    round(time.time() - t0, 2)))
                 if self.eval_every and self.eval_fn and step % self.eval_every == 0:
                     ev = self.eval_fn(self.model, state["params"])
                     if self.logger:
                         self.logger({"step": step, **{f"eval_{k}": v for k, v in ev.items()}})
                 if self.ckpt_every and self.ckpt_dir and step % self.ckpt_every == 0:
                     CK.save_checkpoint(jax.device_get(state), self.ckpt_dir, step)
+            flush()
         return {"state": state, "history": history}
+
+    # -- benchmarking ------------------------------------------------------
+    def bench(self, steps: int = 20, warmup: int = 3) -> Dict[str, Any]:
+        """Measure the hot path: compile time, steady-state step time, and
+        tokens/sec. The ONE timing implementation behind the ``bench`` run
+        kind (``python -m repro bench``) and ``benchmarks/``."""
+        t0 = time.time()
+        state = self.setup()
+        setup_s = time.time() - t0
+        start = int(state["step"])
+        ctx = self.mesh if self.mesh is not None else _nullctx()
+        with ctx:
+            loader = self._wrapped_loader()
+            it = iter(loader.batches(1 + warmup + steps, start_step=start))
+            t0 = time.time()
+            state, m = self._step(state, next(it))
+            jax.block_until_ready(m)
+            compile_s = time.time() - t0  # first call: trace+compile+run
+            for _ in range(warmup):
+                state, m = self._step(state, next(it))
+            jax.block_until_ready(m)
+            t0 = time.time()
+            for _ in range(steps):
+                state, m = self._step(state, next(it))
+            jax.block_until_ready((m, state["step"]))
+            wall = time.time() - t0
+        loss = float(jax.device_get(m.get("loss", m.get("ce"))))
+        result = {
+            "steps": steps,
+            "warmup": warmup,
+            "setup_s": round(setup_s, 3),
+            "compile_s": round(compile_s, 3),
+            "steady_step_ms": round(wall / steps * 1000, 3),
+            "steps_per_s": round(steps / wall, 3) if wall > 0 else 0.0,
+            "final_loss": round(loss, 6),
+            "prefetch": self.prefetch,
+            "grad_accum": self.grad_accum,
+        }
+        gb = getattr(self.loader, "global_batch", None)
+        seq = getattr(getattr(self.loader, "dataset", None), "seq_len", None)
+        if gb and seq:
+            result["global_batch"] = int(gb)
+            result["seq_len"] = int(seq)
+            result["tokens_per_s"] = int(gb * seq * steps / wall) if wall > 0 else 0
+        return result
 
 
 class _nullctx:

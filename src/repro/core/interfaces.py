@@ -79,6 +79,7 @@ def register_builtin_interfaces():
             "mesh_provider": MeshProviderIF,
             "shape": InputShape,
             "precision": object,
+            "remat_policy": object,
             "gym": Gym,
             "tracker": TrackerIF,
             "checkpointer": object,

@@ -51,10 +51,33 @@ class ChunkedLMDataset:
         return self.n_samples
 
     def sample(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
-        k = int(self.order[i % max(self.n_samples, 1)])
+        x, y = self.sample_batch(np.asarray([i]))
+        return x[0], y[0]
+
+    def sample_batch(self, idxs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized assembly: one strided gather for the whole batch
+        ([B, seq_len+1] fancy-index on the memmap) instead of B Python
+        slices — the loader hot path."""
+        ks = self.order[np.asarray(idxs, dtype=np.int64) % max(self.n_samples, 1)]
         w = self.seq_len + 1
-        chunk = np.asarray(self.dataset.tokens[k * w : (k + 1) * w], dtype=np.int32)
-        return chunk[:-1], chunk[1:]
+        offs = ks[:, None] * w + np.arange(w, dtype=np.int64)[None, :]
+        chunks = self.dataset.tokens[offs].astype(np.int32)
+        return np.ascontiguousarray(chunks[:, :-1]), np.ascontiguousarray(chunks[:, 1:])
+
+
+def _vectorized_dataset(ds) -> bool:
+    """Use ``sample_batch`` only when it is at least as derived as
+    ``sample`` in the dataset's MRO: a subclass that overrides ``sample``
+    (the DatasetIF method) without overriding ``sample_batch`` would
+    otherwise have its override silently bypassed by the inherited
+    vectorized path."""
+    mro = type(ds).__mro__
+    sb = next((i for i, c in enumerate(mro) if "sample_batch" in c.__dict__),
+              None)
+    if sb is None:
+        return False
+    s = next((i for i, c in enumerate(mro) if "sample" in c.__dict__), None)
+    return s is None or sb <= s
 
 
 @dataclasses.dataclass
@@ -72,18 +95,19 @@ class ShardedLoader:
         self.local_batch = self.global_batch // self.dp_size
 
     def batches(self, steps: int, start_step: int = 0) -> Iterator[dict]:
+        vectorized = _vectorized_dataset(self.dataset)
         for step in range(start_step, start_step + steps):
-            base = step * self.global_batch
-            toks, labs = [], []
-            for j in range(self.local_batch):
-                idx = base + self.dp_rank * self.local_batch + j
-                x, y = self.dataset.sample(idx)
-                toks.append(x)
-                labs.append(y)
-            yield {
-                "tokens": np.stack(toks),
-                "labels": np.stack(labs),
-            }
+            lo = step * self.global_batch + self.dp_rank * self.local_batch
+            if vectorized:
+                toks, labs = self.dataset.sample_batch(
+                    np.arange(lo, lo + self.local_batch, dtype=np.int64)
+                )
+            else:  # custom DatasetIF components only define sample()
+                pairs = [self.dataset.sample(lo + j)
+                         for j in range(self.local_batch)]
+                toks = np.stack([p[0] for p in pairs])
+                labs = np.stack([p[1] for p in pairs])
+            yield {"tokens": toks, "labels": labs}
 
 
 def synthetic_dataset(n_tokens: int, vocab: int, prefix: str, seed: int = 0,

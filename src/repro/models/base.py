@@ -106,6 +106,9 @@ class ArchConfig:
     use_flash_kernel: bool = False
     # FSDP unit size: layers per scan step (all-gather message granularity)
     scan_block_size: int = 1
+    # activation-remat policy for scanned layer groups:
+    # none | full | selective (dots_saveable)
+    remat: str = "full"
     # source citation for the config
     source: str = ""
 

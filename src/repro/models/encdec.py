@@ -16,6 +16,7 @@ from . import attention as A
 from . import base as B
 from . import mlp as M
 from .common import apply_norm, embed_init, norm_axes, norm_params
+from .stacked import Stacked, stack_init
 
 
 def _init_enc_block(cfg, rng):
@@ -67,15 +68,15 @@ class EncDecLM(B.Model):
     def init(self, rng):
         cfg = self.cfg
         r = jax.random.split(rng, 6)
-        enc_rngs = jax.random.split(r[0], cfg.n_encoder_layers)
-        dec_rngs = jax.random.split(r[1], cfg.n_layers)
         return {
             "embed": embed_init(r[2], (cfg.vocab, cfg.d_model)),
             "pos_embed": embed_init(r[3], (cfg.max_positions, cfg.d_model)),
             "enc_pos_embed": embed_init(r[4], (cfg.encoder_frames, cfg.d_model)),
-            "enc_blocks": jax.vmap(lambda k: _init_enc_block(cfg, k))(enc_rngs),
+            "enc_blocks": stack_init(lambda k: _init_enc_block(cfg, k),
+                                     r[0], cfg.n_encoder_layers),
             "enc_norm": norm_params(cfg),
-            "dec_blocks": jax.vmap(lambda k: _init_dec_block(cfg, k))(dec_rngs),
+            "dec_blocks": stack_init(lambda k: _init_dec_block(cfg, k),
+                                     r[1], cfg.n_layers),
             "final_norm": norm_params(cfg),
         }
 
@@ -105,10 +106,11 @@ class EncDecLM(B.Model):
             h = apply_norm(cfg, bp["attn_norm"], x)
             x = x + A.bidir_forward(cfg, bp["attn"], h)
             h = apply_norm(cfg, bp["mlp_norm"], x)
-            return B.constrain(x + M.mlp_forward(cfg, bp["mlp"], h), mesh_ctx), None
+            return B.constrain(x + M.mlp_forward(cfg, bp["mlp"], h), mesh_ctx)
 
-        x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_blocks"])
-        return apply_norm(cfg, params["enc_norm"], x)
+        stack = Stacked(body, cfg.n_encoder_layers, remat=cfg.remat)
+        return apply_norm(cfg, params["enc_norm"],
+                          stack.fold(params["enc_blocks"], x))
 
     def apply(self, params, batch, mesh_ctx=None, storage_axes=()):
         cfg = self.cfg
@@ -127,9 +129,10 @@ class EncDecLM(B.Model):
             kv = A.cross_kv(cfg, bp["cross_attn"], enc)
             x = x + A.cross_forward(cfg, bp["cross_attn"], h, kv)
             h = apply_norm(cfg, bp["mlp_norm"], x)
-            return B.constrain(x + M.mlp_forward(cfg, bp["mlp"], h), mesh_ctx), None
+            return B.constrain(x + M.mlp_forward(cfg, bp["mlp"], h), mesh_ctx)
 
-        x, _ = jax.lax.scan(jax.checkpoint(body), x, params["dec_blocks"])
+        x = Stacked(body, cfg.n_layers,
+                    remat=cfg.remat).fold(params["dec_blocks"], x)
         x = apply_norm(cfg, params["final_norm"], x)
         logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
         if mesh_ctx is not None and mesh_ctx.tp_axis is not None:

@@ -1,0 +1,121 @@
+"""Scan-over-layers: the ``Stacked`` abstraction + activation-remat policies.
+
+A ``Stacked`` consumes a pytree of *stacked* layer params ([L, ...] leaves,
+built with :func:`stack_init`) with ``jax.lax.scan``, compiling the layer
+body ONCE instead of unrolling L copies into one giant graph (the
+haliax-``Stacked`` / "scan layers" pattern). Layers are scanned in groups of
+``block_size`` — the FSDP-unit dial: each scan step all-gathers exactly one
+group's parameters, so the group size sets the collective message size.
+
+The remat policy decides what the backward pass recomputes:
+
+* ``none``      — save every intermediate (fastest step, most memory);
+* ``full``      — ``jax.checkpoint`` saving nothing (recompute the whole
+                  group body; least memory);
+* ``selective`` — ``jax.checkpoint`` with ``dots_saveable``: matmul outputs
+                  are saved, everything else (norms, gelus, softmaxes) is
+                  recomputed — the usual best speed/memory trade.
+
+Policies are registered as ``remat_policy`` components and selectable per
+arch via ``ArchConfig.remat``, so ablation sweeps can grid over them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+
+REMAT_VARIANTS = ("none", "full", "selective")
+
+
+@dataclasses.dataclass(frozen=True)
+class RematPolicy:
+    """Named activation-checkpoint policy applied to a scanned layer group."""
+
+    name: str = "full"
+
+    def __post_init__(self):
+        if self.name not in REMAT_VARIANTS:
+            raise ValueError(
+                f"unknown remat policy {self.name!r}; one of {REMAT_VARIANTS}"
+            )
+
+    def wrap(self, fn: Callable) -> Callable:
+        if self.name == "none":
+            return fn
+        if self.name == "selective":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.dots_saveable
+            )
+        return jax.checkpoint(fn)
+
+
+def resolve_remat(policy) -> RematPolicy:
+    """Accept a RematPolicy, a policy name, or None (-> full)."""
+    if policy is None:
+        return RematPolicy("full")
+    if isinstance(policy, RematPolicy):
+        return policy
+    return RematPolicy(str(policy))
+
+
+def stack_init(init_fn: Callable, rng, n: int):
+    """Init n i.i.d. layers as one stacked pytree ([n, ...] leaves)."""
+    rngs = jax.random.split(rng, n)
+    return jax.vmap(init_fn)(rngs)
+
+
+def take_layer(tree, i):
+    """Slice layer i out of a stacked (or group-stacked) pytree."""
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+class Stacked:
+    """A homogeneous layer stack applied by ``lax.scan``.
+
+    ``body(carry, layer_params) -> carry`` is the single-layer step;
+    ``fold`` threads the carry through all layers (grouped + remat'd),
+    ``scan`` additionally collects a per-layer output (serving paths).
+    """
+
+    def __init__(self, body: Callable[[Any, Any], Any], n_layers: int,
+                 block_size: int = 1, remat="full",
+                 tail: Optional[Callable[[Any], Any]] = None):
+        self.body = body
+        self.n_layers = n_layers
+        k = max(1, min(int(block_size) or 1, n_layers))
+        while n_layers % k:  # largest divisor <= requested size
+            k -= 1
+        self.block_size = k
+        self.remat = resolve_remat(remat)
+        self.tail = tail  # runs after each group (weight-shared attn, etc.)
+
+    def _grouped(self, stack_params):
+        ngroups = self.n_layers // self.block_size
+        return jax.tree_util.tree_map(
+            lambda a: a.reshape((ngroups, self.block_size) + a.shape[1:]),
+            stack_params,
+        )
+
+    def fold(self, stack_params, carry):
+        """carry -> carry through all layers (the training hot path)."""
+
+        def group_body(carry, group):
+            for i in range(self.block_size):
+                carry = self.body(carry, take_layer(group, i))
+            if self.tail is not None:
+                carry = self.tail(carry)
+            return carry, None
+
+        carry, _ = jax.lax.scan(
+            self.remat.wrap(group_body), carry, self._grouped(stack_params)
+        )
+        return carry
+
+    def scan(self, xs, carry, body: Optional[Callable] = None) -> Tuple[Any, Any]:
+        """Per-layer scan collecting outputs; ``xs`` is any pytree with
+        stacked leading dims (params, or (params, cache) pairs). The body
+        must return ``(carry, y)``. No grouping/remat: serving paths."""
+        fn = body or self.body
+        return jax.lax.scan(fn, carry, xs)

@@ -23,6 +23,7 @@ from . import base as B
 from . import mlp as M
 from . import moe as MOE
 from . import ssm as S
+from . import stacked as ST
 from .common import apply_norm, embed_init, norm_axes, norm_params, softmax_cross_entropy, sharded_cross_entropy
 
 
@@ -189,19 +190,14 @@ def init_cache_block(cfg, kind, batch, max_len, dtype):
 # ---------------------------------------------------------------------------
 # stacked init helpers
 # ---------------------------------------------------------------------------
-def _stack_init(init_fn, rng, n):
-    rngs = jax.random.split(rng, n)
-    return jax.vmap(init_fn)(rngs)
+_stack_init = ST.stack_init
+_take_layer = ST.take_layer
 
 
 def _with_layer_axis(axes_tree):
     return jax.tree_util.tree_map(
         lambda t: (B.LAYER,) + tuple(t), axes_tree, is_leaf=lambda t: isinstance(t, tuple)
     )
-
-
-def _take_layer(tree, i):
-    return jax.tree_util.tree_map(lambda a: a[i], tree)
 
 
 class DecoderLM(B.Model):
@@ -285,30 +281,26 @@ class DecoderLM(B.Model):
                     n_layers, shared_attn=None, force_group=None):
         """Scan over layer groups of size cfg.scan_block_size (FSDP unit)."""
         cfg = self.cfg
-        k = force_group or max(1, min(cfg.scan_block_size, n_layers))
-        while n_layers % k:
-            k -= 1
-        ngroups = n_layers // k
-        grouped = jax.tree_util.tree_map(
-            lambda a: a.reshape((ngroups, k) + a.shape[1:]), stack_params
-        )
 
-        def body(carry, group):
+        def body(carry, lp):
             x, aux = carry
-            for i in range(k):
-                lp = _take_layer(group, i)
-                x, a = apply_block(cfg, kind, lp, x, positions, mesh_ctx, storage_axes)
-                aux = aux + a
-                if shared_attn is not None and i == k - 1:
-                    x, _ = apply_block(
-                        cfg, "dense_block", shared_attn, x, positions, mesh_ctx
-                    )
-            return (x, aux), None
+            x, a = apply_block(cfg, kind, lp, x, positions, mesh_ctx, storage_axes)
+            return (x, aux + a)
 
-        body = jax.checkpoint(body)
-        (x, aux), _ = jax.lax.scan(
-            body, (x, jnp.zeros((), jnp.float32)), grouped
+        def tail(carry):
+            x, aux = carry
+            x, _ = apply_block(
+                cfg, "dense_block", shared_attn, x, positions, mesh_ctx
+            )
+            return (x, aux)
+
+        stack = ST.Stacked(
+            body, n_layers,
+            block_size=force_group or cfg.scan_block_size,
+            remat=cfg.remat,
+            tail=tail if shared_attn is not None else None,
         )
+        x, aux = stack.fold(stack_params, (x, jnp.zeros((), jnp.float32)))
         return x, aux
 
     def backbone(self, params, x, positions, mesh_ctx, storage_axes=()):
@@ -392,12 +384,12 @@ class DecoderLM(B.Model):
         else:
             for name, kind, idxs in self._stacks():
 
-                def body(x, lp):
+                def body(x, lp, kind=kind):
                     x, c = prefill_block(cfg, kind, lp, x, positions, max_len,
                                          cache_dtype, mesh_ctx, storage_axes)
                     return x, c
 
-                x, cs = jax.lax.scan(body, x, params[name])
+                x, cs = ST.Stacked(body, len(idxs)).scan(params[name], x)
                 cache[name] = cs
         logits = self.logits(params, x[:, -1:], mesh_ctx)[:, 0]
         return logits, cache
@@ -470,7 +462,8 @@ class DecoderLM(B.Model):
                                             mesh_ctx)
                     return x, nc
 
-                x, nc = jax.lax.scan(body, x, (params[name], cache[name]))
+                x, nc = ST.Stacked(body, len(idxs)).scan(
+                    (params[name], cache[name]), x)
                 new_cache[name] = nc
         logits = self.logits(params, x, mesh_ctx)[:, 0]
         return logits, new_cache

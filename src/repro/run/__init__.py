@@ -1,7 +1,7 @@
 """The declarative run API: one config grammar for every entrypoint.
 
 A *run document* is a YAML mapping with a ``run:`` header naming the run
-kind (``train | dryrun | serve | trace | sweep``) and a per-kind settings
+kind (``train | bench | dryrun | serve | trace | sweep``) and a per-kind settings
 section; everything else is the component graph the resolver builds.  Every
 run materializes its fully-resolved config plus a content fingerprint into
 its output directory, so any run — including each sweep trial — can be

@@ -75,8 +75,10 @@ def execute(cfg: RunConfig, *, registry: Optional[Registry] = None,
     fp = fingerprint(resolved)
     if write_files and cfg.output_dir:
         write_artifacts(cfg.output_dir, resolved, cfg.name, cfg.kind)
+    ctx_options = dict(options or {})
+    ctx_options.setdefault("_write_files", write_files)
     ctx = RunContext(cfg=cfg, resolved_doc=resolved, fingerprint=fp,
-                     registry=reg, options=dict(options or {}),
+                     registry=reg, options=ctx_options,
                      log=log or (lambda msg: None))
     kind = _run_kind(reg, cfg.kind)
     result = kind.execute(ctx) or {}

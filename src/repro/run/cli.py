@@ -1,6 +1,7 @@
 """One CLI over the declarative run API.
 
   python -m repro train  --config run.yaml [--set path=value ...]
+  python -m repro bench  --config run.yaml [--set ...]
   python -m repro dryrun --config run.yaml [--set ...] [--json out.json]
   python -m repro serve  --config run.yaml [--set ...]
   python -m repro trace  --config run.yaml [--set ...]
@@ -46,6 +47,9 @@ def build_parser() -> argparse.ArgumentParser:
     sub = ap.add_subparsers(dest="command", required=True)
 
     _add_kind_parser(sub, "train", "resolve the graph and drive the gym")
+    _add_kind_parser(sub, "bench",
+                     "measure compile / steady-state step time / tokens-sec "
+                     "for a config; writes BENCH_<name>.json")
     d = _add_kind_parser(sub, "dryrun", "compile-time roofline analysis")
     d.add_argument("--json", default="", help="also write the result JSON here")
     _add_kind_parser(sub, "serve", "batched prefill + greedy decode")
@@ -117,6 +121,9 @@ def _cmd_kind(args, kind: str) -> int:
         else:
             print(f"done: {result['steps']} steps, no logged points "
                   f"(steps < log_every)", flush=True)
+    if kind == "bench":
+        print(f"bench artifact: {result.get('bench_file', '(disabled)')}",
+              flush=True)
     if kind == "dryrun" and getattr(args, "json", ""):
         with open(args.json, "w") as f:
             json.dump(result, f, indent=2, default=str)

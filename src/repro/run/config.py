@@ -5,7 +5,7 @@ A run document is one YAML mapping:
 .. code-block:: yaml
 
     run:
-      kind: train            # train | dryrun | serve | trace | sweep
+      kind: train            # train | bench | dryrun | serve | trace | sweep
       name: quickstart       # optional; defaults to the YAML file stem
       output_dir: results/runs/quickstart   # optional; derived from name
       train:                 # per-kind settings (section key == kind)
@@ -54,6 +54,23 @@ class DryrunSettings:
 
 
 @dataclasses.dataclass
+class BenchSettings:
+    """``run.bench``: measure the train hot path (compile time, steady-state
+    step time, tokens/sec) for the resolved gym and track it as an artifact.
+
+    Writes ``BENCH_<name>.json`` into ``bench_dir`` (default: the current
+    working directory, i.e. the repo root in CI) in addition to the run
+    directory's ``result.json`` — the perf trajectory future PRs regress
+    against.
+    """
+
+    steps: int = 20               # measured steps (post-warmup)
+    warmup: int = 3               # steps between compile and measurement
+    gym_key: str = "gym"          # top-level graph entry that is the gym
+    bench_dir: str = "."          # where BENCH_<name>.json lands
+
+
+@dataclasses.dataclass
 class ServeSettings:
     """``run.serve``: batched prefill + greedy decode.
 
@@ -81,6 +98,7 @@ class TraceSettings:
 #: kind -> settings dataclass (None => free-form mapping, e.g. sweep specs).
 SETTINGS_SCHEMAS: Dict[str, Optional[Type]] = {
     "train": TrainSettings,
+    "bench": BenchSettings,
     "dryrun": DryrunSettings,
     "serve": ServeSettings,
     "trace": TraceSettings,

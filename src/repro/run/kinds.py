@@ -10,11 +10,14 @@ script::
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 from typing import Any, Callable, Dict, Optional, Type
 
 from ..config.registry import DEFAULT_REGISTRY as REG
 from .config import (
+    BenchSettings,
     DryrunSettings,
     RunError,
     ServeSettings,
@@ -100,6 +103,38 @@ def execute_train(ctx) -> Dict[str, Any]:
     tokens = _loader_tokens(gym, s.steps)
     if tokens is not None:
         result["tokens_per_s"] = int(tokens / wall) if wall > 0 else 0
+    return result
+
+
+# ---------------------------------------------------------------------------
+# bench
+# ---------------------------------------------------------------------------
+def execute_bench(ctx) -> Dict[str, Any]:
+    """Measure the resolved gym's hot path and write the tracked
+    ``BENCH_<name>.json`` perf artifact next to the repo's other baselines."""
+    s: BenchSettings = ctx.cfg.settings
+    graph = _resolve_graph(ctx)
+    gym = _graph_get(graph, s.gym_key, "bench")
+    result = gym.bench(steps=s.steps, warmup=s.warmup)
+    result["name"] = ctx.cfg.name
+    arch = graph.get("arch")
+    if arch is not None:
+        result["arch"] = getattr(arch, "name", str(arch))
+        result["n_layers"] = getattr(arch, "n_layers", None)
+        result["remat"] = getattr(arch, "remat", None)
+        result["scan_block_size"] = getattr(arch, "scan_block_size", None)
+    ctx.log(f"bench {ctx.cfg.name!r}: compile {result['compile_s']:.2f}s, "
+            f"steady {result['steady_step_ms']:.1f} ms/step"
+            + (f", {result['tokens_per_s']} tok/s"
+               if "tokens_per_s" in result else ""))
+    # the tracked artifact is a filesystem side effect: gated like result.json
+    if s.bench_dir and ctx.options.get("_write_files", True):
+        path = os.path.join(s.bench_dir, f"BENCH_{ctx.cfg.name}.json")
+        with open(path, "w") as f:
+            json.dump({**result, "fingerprint": ctx.fingerprint}, f,
+                      indent=2, default=str)
+            f.write("\n")
+        result["bench_file"] = path
     return result
 
 
@@ -226,6 +261,7 @@ def register_builtin_kinds() -> None:
         return
     _REGISTERED = True
     register_run_kind("train", TrainSettings, execute_train)
+    register_run_kind("bench", BenchSettings, execute_bench)
     register_run_kind("dryrun", DryrunSettings, execute_dryrun)
     register_run_kind("serve", ServeSettings, execute_serve)
     register_run_kind("trace", TraceSettings, execute_trace)

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
+
 
 def gpipe_apply(
     stage_fn: Callable[[Any, jax.Array], jax.Array],
@@ -80,7 +82,7 @@ def gpipe_apply(
         )
         return outs
 
-    return jax.shard_map(
+    return shard_map(
         local,
         mesh=mesh,
         in_specs=(P(pipe_axis), P()),

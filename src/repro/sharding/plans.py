@@ -99,6 +99,13 @@ def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
     return math.prod(mesh.shape[a] for a in axes)
 
 
+def _norm_axes(axes: Tuple[str, ...]):
+    """Singleton axis tuples become bare names: newer PartitionSpec no longer
+    normalizes ("data",) -> "data" itself, and the two spell the same
+    sharding."""
+    return axes if len(axes) > 1 else axes[0]
+
+
 def leaf_spec(plan: ShardingPlan, mesh: Mesh, shape: Tuple[int, ...],
               logical: Tuple[Any, ...], warnings: Optional[List[str]] = None,
               path: str = "") -> P:
@@ -111,13 +118,13 @@ def leaf_spec(plan: ShardingPlan, mesh: Mesh, shape: Tuple[int, ...],
         e_dim = logical.index(B.EXPERTS)
         ep_size = _axes_size(mesh, plan.ep_axes)
         if shape[e_dim] % ep_size == 0:
-            spec[e_dim] = plan.ep_axes if len(plan.ep_axes) > 1 else plan.ep_axes[0]
+            spec[e_dim] = _norm_axes(plan.ep_axes)
         elif warnings is not None:
             warnings.append(f"{path}: experts {shape[e_dim]} !% ep {ep_size}")
         if plan.ep_storage_axes and B.D_MODEL in logical:
             d_dim = logical.index(B.D_MODEL)
             if shape[d_dim] % _axes_size(mesh, plan.ep_storage_axes) == 0:
-                spec[d_dim] = plan.ep_storage_axes
+                spec[d_dim] = _norm_axes(plan.ep_storage_axes)
         return P(*spec)
 
     if plan.tp:
@@ -139,7 +146,7 @@ def leaf_spec(plan: ShardingPlan, mesh: Mesh, shape: Tuple[int, ...],
         ]
         if cands:
             _, i = max(cands)
-            spec[i] = plan.fsdp_axes
+            spec[i] = _norm_axes(plan.fsdp_axes)
         elif warnings is not None and max(shape, default=0) > 1024:
             warnings.append(f"{path}: no dim divisible by fsdp {fs} in {shape}")
     return P(*spec)

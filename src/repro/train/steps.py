@@ -51,14 +51,20 @@ def make_train_step(model, optimizer, mesh_ctx: Optional[B.MeshContext] = None,
                                     + x.shape[1:]),
                 batch,
             )
-            zeros_g = jax.tree_util.tree_map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"]
-            )
+            # accumulator structure comes from what value_and_grad actually
+            # produces (eval_shape), but gradients accumulate in >= f32: a
+            # bf16 scan carry would compound 8-mantissa-bit rounding every
+            # micro-step. jnp.add(f32, bf16) promotes, so the carry stays f32.
             mb0 = jax.tree_util.tree_map(lambda x: x[0], mbs)
-            m_shapes = jax.eval_shape(loss_fn, state["params"], mb0)[1]
-            zeros_m = jax.tree_util.tree_map(
-                lambda s: jnp.zeros(s.shape, s.dtype), m_shapes
+            (_, m_shapes), g_shapes = jax.eval_shape(
+                jax.value_and_grad(loss_fn, has_aux=True), state["params"], mb0
             )
+            zeros_g = jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, jnp.promote_types(s.dtype,
+                                                               jnp.float32)),
+                g_shapes)
+            zeros_m = jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype), m_shapes)
             (grads, metrics), _ = jax.lax.scan(
                 micro, (zeros_g, zeros_m), mbs
             )

@@ -1,0 +1,273 @@
+"""Hot-path coverage: the optimizations are numerics-preserving.
+
+* remat equivalence — loss/grads identical under none|full|selective;
+* scan-vs-unrolled parity — scan_block_size grouping does not change math;
+* vectorized batch assembly == per-sample assembly;
+* PrefetchLoader yields the same batches in the same order as the sync
+  loader, including resume via start_step;
+* grad-accum zeros carry the grad dtype (bf16 params don't upcast);
+* the ``bench`` run kind produces BENCH_<name>.json with the tracked fields.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.data.packed_dataset import (
+    ChunkedLMDataset,
+    ShardedLoader,
+    synthetic_dataset,
+)
+from repro.data.prefetch import PrefetchLoader
+from repro.models import build_model
+from repro.models.stacked import RematPolicy, Stacked, resolve_remat
+from repro.train import steps as ST
+
+
+def _batch(cfg, batch=2, seq=32, seed=1):
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (batch, seq), 0,
+                              cfg.vocab)
+    return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+
+def _loss_and_grads(cfg, params, batch):
+    model = build_model(cfg)
+
+    def f(p):
+        return ST.compute_loss(model, p, batch)[0]
+
+    loss, grads = jax.jit(jax.value_and_grad(f))(params)
+    return float(loss), grads
+
+
+# ---------------------------------------------------------------------------
+# remat equivalence
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["qwen1p5_0p5b", "mamba2_780m"])
+def test_remat_equivalence(arch):
+    cfg = get_reduced(arch)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    losses, grads = {}, {}
+    for remat in ("none", "full", "selective"):
+        losses[remat], grads[remat] = _loss_and_grads(
+            cfg.with_(remat=remat), params, batch)
+    assert losses["none"] == losses["full"] == losses["selective"], losses
+    # grads flow through bf16 activations: recompute may differ by one ulp
+    for remat in ("full", "selective"):
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_allclose(a, b, rtol=2e-2, atol=1e-3),
+            grads["none"], grads[remat])
+
+
+def test_remat_policy_component():
+    from repro.config.registry import DEFAULT_REGISTRY
+
+    import repro.core.components  # noqa: F401
+
+    for name in ("none", "full", "selective"):
+        pol = DEFAULT_REGISTRY.build("remat_policy", name)
+        assert isinstance(pol, RematPolicy) and pol.name == name
+    with pytest.raises(ValueError):
+        resolve_remat("bogus")
+
+
+# ---------------------------------------------------------------------------
+# scan-vs-unrolled parity
+# ---------------------------------------------------------------------------
+def test_scan_vs_unrolled_parity():
+    cfg = get_reduced("qwen1p5_0p5b").with_(n_layers=2)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    # block=1 (scan 2 groups), block=2 (one group == fully unrolled body);
+    # bf16 activations: regrouping may reorder fusions by one ulp
+    l1, g1 = _loss_and_grads(cfg.with_(scan_block_size=1), params, batch)
+    l2, g2 = _loss_and_grads(cfg.with_(scan_block_size=2), params, batch)
+    np.testing.assert_allclose(l1, l2, rtol=5e-4, atol=5e-4)
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(g1)[0],
+            jax.tree_util.tree_flatten_with_path(g2)[0]):
+        a = np.asarray(a, np.float64)
+        b = np.asarray(b, np.float64)
+        rel = np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-12)
+        assert rel < 2e-2, (jax.tree_util.keystr(path), rel)
+
+
+def test_stacked_block_size_clamps_to_divisor():
+    stack = Stacked(lambda c, lp: c, n_layers=6, block_size=4)
+    assert stack.block_size == 3  # largest divisor of 6 <= 4
+    stack = Stacked(lambda c, lp: c, n_layers=5, block_size=99)
+    assert stack.block_size == 5
+
+
+def test_stacked_fold_matches_python_loop():
+    n, d = 4, 8
+    ws = jax.random.normal(jax.random.PRNGKey(0), (n, d, d)) * 0.3
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (2, d))
+
+    def body(x, w):
+        return jnp.tanh(x @ w)
+
+    ref = x0
+    for i in range(n):
+        ref = body(ref, ws[i])
+    for block, remat in [(1, "none"), (2, "full"), (4, "selective")]:
+        out = Stacked(body, n, block_size=block, remat=remat).fold(ws, x0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def chunked(tmp_path_factory):
+    prefix = str(tmp_path_factory.mktemp("data") / "pack")
+    ds = synthetic_dataset(40000, 512, prefix, seed=7)
+    return ChunkedLMDataset(ds, 32, seed=3)
+
+
+def test_sample_batch_matches_sample(chunked):
+    idxs = np.asarray([0, 5, 17, 1000, 10 ** 7])
+    xs, ys = chunked.sample_batch(idxs)
+    for row, i in enumerate(idxs):
+        x, y = chunked.sample(int(i))
+        assert (xs[row] == x).all() and (ys[row] == y).all()
+    assert xs.dtype == np.int32
+
+
+def test_prefetch_loader_determinism(chunked):
+    loader = ShardedLoader(chunked, global_batch=8, dp_rank=0, dp_size=1)
+    sync = list(loader.batches(6, start_step=0))
+    pre = list(PrefetchLoader(loader, depth=3).batches(6, start_step=0))
+    assert len(sync) == len(pre) == 6
+    for a, b in zip(sync, pre):
+        assert (a["tokens"] == np.asarray(b["tokens"])).all()
+        assert (a["labels"] == np.asarray(b["labels"])).all()
+
+
+def test_prefetch_loader_resume_start_step(chunked):
+    loader = ShardedLoader(chunked, global_batch=4)
+    full = list(loader.batches(8, start_step=0))
+    resumed = list(PrefetchLoader(loader, depth=2).batches(5, start_step=3))
+    assert len(resumed) == 5
+    for a, b in zip(full[3:], resumed):
+        assert (a["tokens"] == np.asarray(b["tokens"])).all()
+
+
+def test_prefetch_loader_propagates_errors(chunked):
+    class Boom:
+        def batches(self, steps, start_step=0):
+            yield {"tokens": np.zeros((1, 4), np.int32)}
+            raise RuntimeError("loader exploded")
+
+    it = PrefetchLoader(Boom(), depth=2, to_device=False).batches(2)
+    next(it)
+    with pytest.raises(RuntimeError, match="loader exploded"):
+        list(it)
+
+
+def test_prefetch_loader_early_abandon_no_hang(chunked):
+    loader = ShardedLoader(chunked, global_batch=4)
+    it = PrefetchLoader(loader, depth=1, to_device=False).batches(50)
+    next(it)
+    it.close()  # generator GC path: worker must not deadlock
+
+
+# ---------------------------------------------------------------------------
+# grad-accum dtype
+# ---------------------------------------------------------------------------
+def test_grad_accum_zeros_carry_grad_dtype():
+    cfg = get_reduced("qwen1p5_0p5b")
+    model = build_model(cfg)
+    from repro.optim.adamw import AdamW
+
+    opt = AdamW(lr=1e-3)
+    state = ST.init_train_state(model, opt, jax.random.PRNGKey(0),
+                                param_dtype=jnp.bfloat16)
+    assert state["params"]["embed"].dtype == jnp.bfloat16
+    step = jax.jit(ST.make_train_step(model, opt, grad_accum=2))
+    state, metrics = step(state, _batch(cfg, batch=4))
+    assert state["params"]["embed"].dtype == jnp.bfloat16
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_grad_accum_matches_single_batch():
+    cfg = get_reduced("qwen1p5_0p5b")
+    model = build_model(cfg)
+    from repro.optim.adamw import AdamW
+
+    opt = AdamW(lr=1e-3)
+    batch = _batch(cfg, batch=4)
+    s1 = ST.init_train_state(model, opt, jax.random.PRNGKey(0))
+    s2 = jax.tree_util.tree_map(lambda a: a.copy(), s1)
+    s1, m1 = jax.jit(ST.make_train_step(model, opt, grad_accum=1))(s1, batch)
+    s2, m2 = jax.jit(ST.make_train_step(model, opt, grad_accum=2))(s2, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# gym metrics + bench kind
+# ---------------------------------------------------------------------------
+def _quickstart_doc(tmp_path, kind, settings, name="benchtest"):
+    prefix = str(tmp_path / "pack")
+    return {
+        "run": {"kind": kind, "name": name,
+                "output_dir": str(tmp_path / "run"), kind: settings},
+        "arch": {"component_key": "arch_config", "variant_key": "qwen1p5_0p5b",
+                 "config": {"reduced": True}},
+        "model": {"component_key": "model", "variant_key": "auto",
+                  "config": {"arch_config": {"instance_key": "arch"}}},
+        "optimizer": {"component_key": "optimizer", "variant_key": "adamw",
+                      "config": {"lr": 0.001}},
+        "dataset": {"component_key": "dataset", "variant_key": "synthetic",
+                    "config": {"n_tokens": 30000, "vocab": 512,
+                               "prefix": prefix, "seq_len": 32}},
+        "loader": {"component_key": "loader", "variant_key": "sharded",
+                   "config": {"dataset": {"instance_key": "dataset"},
+                              "global_batch": 4}},
+        "gym": {"component_key": "gym", "variant_key": "standard",
+                "config": {"model": {"instance_key": "model"},
+                           "optimizer": {"instance_key": "optimizer"},
+                           "loader": {"instance_key": "loader"},
+                           "log_every": 2}},
+    }
+
+
+def test_gym_history_deferred_flush(tmp_path):
+    """Metrics are flushed one window late but the history is complete,
+    ordered, and holds plain floats."""
+    from repro.run.api import execute_doc
+
+    doc = _quickstart_doc(tmp_path, "train", {"steps": 7})
+    result = execute_doc(doc, write_files=False)
+    hist = result["history"]
+    assert [h["step"] for h in hist] == [1, 2, 4, 6]
+    for h in hist:
+        assert isinstance(h["loss"], float) and np.isfinite(h["loss"])
+        assert h["wall_s"] >= 0
+
+
+def test_bench_kind_writes_tracked_artifact(tmp_path):
+    from repro.run.api import execute_doc
+
+    doc = _quickstart_doc(
+        tmp_path, "bench",
+        {"steps": 3, "warmup": 1, "bench_dir": str(tmp_path)})
+    result = execute_doc(doc, write_files=True)
+    path = os.path.join(str(tmp_path), "BENCH_benchtest.json")
+    assert result["bench_file"] == path and os.path.exists(path)
+    with open(path) as f:
+        bench = json.load(f)
+    for key in ("compile_s", "steady_step_ms", "tokens_per_s", "fingerprint",
+                "final_loss"):
+        assert key in bench, key
+    assert bench["steps"] == 3 and bench["steady_step_ms"] > 0
+    # result.json under the run dir carries the same numbers
+    with open(os.path.join(str(tmp_path / "run"), "result.json")) as f:
+        res = json.load(f)
+    assert res["steady_step_ms"] == bench["steady_step_ms"]

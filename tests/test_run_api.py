@@ -265,8 +265,8 @@ def test_execute_with_custom_registry_falls_back_for_run_kinds(tmp_path):
 
 def test_run_kinds_are_registry_components():
     """New run kinds are a registry entry + settings schema, not a script."""
-    assert set(DEFAULT_REGISTRY.variants("run_kind")) == {
-        "train", "dryrun", "serve", "trace", "sweep"}
+    assert set(DEFAULT_REGISTRY.variants("run_kind")) >= {
+        "train", "bench", "dryrun", "serve", "trace", "sweep"}
     kind = DEFAULT_REGISTRY.build("run_kind", "train")
     assert callable(kind.execute)
 
