@@ -1,0 +1,30 @@
+"""Elastic checkpointing subsystem (paper: checkpoint conversion +
+warmstart across parallelism topologies; TorchTitan-style async saves).
+
+Four layers:
+
+- :mod:`.format` — per-leaf shard files keyed by pytree path + a JSON
+  manifest (step, shapes, dtypes, PartitionSpec text), atomic commits.
+- :mod:`.engine` — :class:`AsyncCheckpointer`: non-blocking snapshot on
+  the hot path, background serialization, retention policies.
+- :mod:`.elastic` — restore under a *different* sharding plan / mesh
+  shape than the save, with dtype-cast rules and lossy-cast warnings.
+- :mod:`.export` — HF-style flat export (unstacked layer dims).
+
+Registry components: ``checkpointer/async``, ``checkpointer/sync``.
+"""
+from .elastic import (  # noqa: F401
+    LossyCastWarning,
+    RestoreError,
+    restore,
+    restore_train_state,
+    saved_step,
+)
+from .engine import AsyncCheckpointer, RetentionPolicy  # noqa: F401
+from .export import export_flat  # noqa: F401
+from .format import (  # noqa: F401
+    latest_checkpoint,
+    list_checkpoints,
+    read_manifest,
+    write_checkpoint,
+)

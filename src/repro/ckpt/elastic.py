@@ -1,0 +1,224 @@
+"""Elastic restore: reassemble a checkpoint under a *different* sharding
+plan or mesh shape than it was saved with.
+
+The manifest records the layout each leaf was SAVED under; the target
+layout comes entirely from the caller (a sharding pytree, or a plan+mesh
+from which the full train-state layout is re-derived).  Reassembly is
+host-side — every leaf is loaded full-size and ``jax.device_put`` lays it
+out under the new ``NamedSharding`` — which is exactly the Modalities
+"checkpoint conversion" step: topology in, different topology out.
+
+Dtype rules: a checkpointed leaf is cast to the target leaf's dtype.  A
+*lossy* cast (fewer mantissa bits, float -> int) raises a
+:class:`LossyCastWarning` — except for compute params whose f32 master
+copies are restored in the same call (mixed-precision training keeps the
+precision in ``opt/master``; the bf16 compute copy is derived).
+"""
+from __future__ import annotations
+
+import warnings as _warnings
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from . import format as F
+
+
+class LossyCastWarning(UserWarning):
+    """A checkpoint leaf was cast to a dtype that cannot represent it."""
+
+
+class RestoreError(Exception):
+    """Checkpoint does not match the requested state structure."""
+
+
+# ---------------------------------------------------------------------------
+# dtype casting
+# ---------------------------------------------------------------------------
+def _mantissa_bits(dt: np.dtype) -> Optional[int]:
+    try:
+        import jax.numpy as jnp
+
+        return jnp.finfo(dt).nmant
+    except ValueError:
+        return None  # not a float dtype
+
+
+def is_lossy_cast(src, dst) -> bool:
+    """True when casting ``src`` -> ``dst`` can lose information."""
+    import jax.numpy as jnp
+
+    src, dst = np.dtype(src), np.dtype(dst)
+    if src == dst:
+        return False
+    s_m, d_m = _mantissa_bits(src), _mantissa_bits(dst)
+    if s_m is not None and d_m is not None:
+        # precision loss (fewer mantissa bits) OR range loss (bf16 -> f16
+        # overflows to inf above 65504 despite more mantissa bits)
+        return d_m < s_m or float(jnp.finfo(dst).max) < float(jnp.finfo(src).max)
+    if s_m is not None and d_m is None:
+        return True  # float -> int
+    if s_m is None and d_m is None:
+        return np.dtype(dst).itemsize < np.dtype(src).itemsize
+    # int -> float: exact only while the float's mantissa covers the
+    # integer's value bits (f32 represents ints exactly up to 2**24)
+    bits = 8 * src.itemsize - (1 if src.kind == "i" else 0)
+    return d_m + 1 < bits
+
+
+def cast_leaf(arr: np.ndarray, target_dtype, key: str = "",
+              warn: bool = True, master_restored: bool = False) -> np.ndarray:
+    """Cast one restored leaf, warning on lossy casts.
+
+    ``master_restored`` suppresses the warning for compute params that have
+    their f32 master copy restored alongside (nothing is actually lost).
+    """
+    target_dtype = np.dtype(target_dtype)
+    if arr.dtype == target_dtype:
+        return arr
+    if warn and not master_restored and is_lossy_cast(arr.dtype, target_dtype):
+        _warnings.warn(
+            f"restore: {key or '<leaf>'} saved as {arr.dtype} but restored "
+            f"into {target_dtype} — a lossy cast (e.g. f32 master weights "
+            f"into bf16 compute params loses 16 mantissa bits)",
+            LossyCastWarning,
+            stacklevel=3,
+        )
+    return arr.astype(target_dtype)
+
+
+def _master_keys(ckpt_keys, target_keys) -> set:
+    """Param keys whose f32 master copy is restored IN THIS CALL
+    (``opt/master/<param-key>`` mirrors ``params/<param-key>``).  The master
+    must be in the checkpoint AND among the keys being restored now — a
+    params-only restore (fresh-optimizer warmstart) discards the masters,
+    so its f32 -> bf16 casts really are lossy and must warn."""
+    out = set()
+    for k in ckpt_keys:
+        if k.startswith("opt/master/") and k in target_keys:
+            out.add("params/" + k[len("opt/master/"):])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# restore
+# ---------------------------------------------------------------------------
+def _resolve_step_dir(path: str) -> str:
+    """Accept a committed step dir or a ckpt dir (-> latest committed)."""
+    if F.is_committed(path):
+        return path
+    latest = F.latest_checkpoint(path)
+    if latest is None:
+        raise RestoreError(f"no committed checkpoint at {path!r}")
+    return latest[1]
+
+
+def restore(state_like, path: str, shardings: Any = None, *,
+            prefix: str = "", strict: bool = True,
+            warn_lossy: bool = True):
+    """Rebuild ``state_like``'s pytree from a checkpoint.
+
+    ``state_like`` supplies structure, shapes, and target dtypes (shapes
+    must match the manifest; dtypes may differ — see the casting rules).
+    ``shardings`` (optional) is a matching pytree of ``NamedSharding``s (or
+    None leaves): each leaf is laid out under ITS target sharding, however
+    different from the saved layout — the elastic part.  ``prefix`` selects
+    a subtree of the checkpoint (e.g. ``params`` for a params-only
+    warmstart).  ``strict=False`` keeps ``state_like``'s value for keys the
+    checkpoint does not have (partial warmstart).
+    """
+    import jax
+
+    step_dir = _resolve_step_dir(path)
+    manifest = F.read_manifest(step_dir)
+    entries: Dict[str, Any] = manifest["leaves"]
+
+    flat_like = F.flatten_with_paths(state_like)
+    target_keys = {f"{prefix}/{k}" if prefix else k for k, _ in flat_like}
+    masters = _master_keys(entries, target_keys)
+    leaves, treedef = jax.tree_util.tree_flatten(state_like)
+    assert len(flat_like) == len(leaves)
+    sh_leaves: List[Any]
+    if shardings is None:
+        sh_leaves = [None] * len(leaves)
+    else:
+        # keep explicit None entries as leaves (= "default placement")
+        sh_leaves = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: x is None)
+        if len(sh_leaves) != len(leaves):
+            raise RestoreError(
+                f"shardings tree has {len(sh_leaves)} leaves, state has "
+                f"{len(leaves)}"
+            )
+
+    restored = []
+    missing: List[str] = []
+    for (key, like), sharding in zip(flat_like, sh_leaves):
+        ck_key = f"{prefix}/{key}" if prefix else key
+        entry = entries.get(ck_key)
+        if entry is None:
+            if strict:
+                missing.append(ck_key)
+                continue
+            restored.append(like)
+            continue
+        arr = F.read_leaf(step_dir, entry)
+        like_shape = tuple(getattr(like, "shape", ()))
+        if tuple(arr.shape) != like_shape:
+            if strict:
+                raise RestoreError(
+                    f"{ck_key}: checkpoint shape {tuple(arr.shape)} vs state "
+                    f"shape {like_shape}"
+                )
+            # partial warmstart (e.g. a resized head): the reshaped leaf
+            # keeps its fresh init
+            _warnings.warn(
+                f"restore: {ck_key} shape {tuple(arr.shape)} != state "
+                f"{like_shape}; keeping the current value (strict=False)",
+                UserWarning, stacklevel=2)
+            restored.append(like)
+            continue
+        dtype = getattr(like, "dtype", arr.dtype)
+        arr = cast_leaf(arr, dtype, key=ck_key, warn=warn_lossy,
+                        master_restored=ck_key in masters)
+        if sharding is not None:
+            restored.append(jax.device_put(arr, sharding))
+        else:
+            restored.append(jax.numpy.asarray(arr))
+    if missing:
+        raise RestoreError(
+            f"checkpoint {step_dir} is missing {len(missing)} leaves "
+            f"(first: {missing[:4]}); pass strict=False to keep current "
+            f"values for absent keys"
+        )
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+def restore_train_state(state_like, path: str, *, plan=None, mesh=None,
+                        model=None, optimizer=None, shardings=None,
+                        seed: int = 0, warn_lossy: bool = True):
+    """Restore a full ``{"params", "opt", "step"}`` train state, re-laid-out
+    under ``plan``/``mesh`` (derived via
+    :func:`repro.sharding.plans.train_state_shardings`) or an explicit
+    ``shardings`` pytree."""
+    if shardings is None and plan is not None and mesh is not None:
+        from ..sharding import plans as PL
+
+        if model is None or optimizer is None:
+            raise RestoreError(
+                "restore_train_state under a plan/mesh needs model and "
+                "optimizer to derive the target layout"
+            )
+        shardings, _ = PL.train_state_shardings(plan, mesh, model, optimizer,
+                                                seed=seed)
+    return restore(state_like, path, shardings, warn_lossy=warn_lossy)
+
+
+def saved_step(path: str) -> int:
+    """The step a checkpoint (dir or step dir) was taken at."""
+    return int(F.read_manifest(_resolve_step_dir(path))["step"])
+
+
+def manifest_keys(path: str) -> set:
+    """The pytree keys a checkpoint (dir or step dir) holds."""
+    return set(F.read_manifest(_resolve_step_dir(path))["leaves"])

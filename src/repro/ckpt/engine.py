@@ -1,0 +1,168 @@
+"""The async checkpoint engine: keep the train step hot while saving.
+
+``AsyncCheckpointer.save(state, step)`` does the minimum on the caller's
+thread — start every leaf's device-to-host copy at once
+(``copy_to_host_async``), then materialize the host snapshot (transfers
+overlap, so the wait is one max-latency transfer, not a sum) — and hands
+serialization + file I/O to a single background worker (same pattern as
+``data/prefetch.py``).  The snapshot completes before ``save`` returns,
+so donated buffers (the gym's step donates its input state) can be
+invalidated by the very next step without racing the writer.
+
+Commits are atomic (tmp dir + rename, see :mod:`.format`); a
+:class:`RetentionPolicy` prunes committed checkpoints after each save.
+Worker failures are re-raised on the next ``save``/``wait`` call — a
+checkpoint that silently failed to commit must not look like progress.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from . import elastic as E
+from . import format as F
+
+
+@dataclasses.dataclass(frozen=True)
+class RetentionPolicy:
+    """Which committed checkpoints survive a prune.
+
+    ``keep_last``: the N newest always survive (0 = unlimited).
+    ``keep_every``: checkpoints whose step is a multiple survive forever
+    (0 = none are permanent) — the "milestone" rule.
+    """
+
+    keep_last: int = 3
+    keep_every: int = 0
+
+    def survivors(self, steps) -> set:
+        steps = sorted(steps)
+        keep = set(steps[-self.keep_last:] if self.keep_last else steps)
+        if self.keep_every:
+            keep.update(s for s in steps if s % self.keep_every == 0)
+        return keep
+
+
+@dataclasses.dataclass
+class AsyncCheckpointer:
+    """Sharded, atomic, retained checkpoint saves off the hot path.
+
+    ``background=False`` degrades to a synchronous writer with the same
+    format and retention (useful in tests and single-shot exports).
+    """
+
+    ckpt_dir: str
+    retention: RetentionPolicy = dataclasses.field(default_factory=RetentionPolicy)
+    background: bool = True
+
+    def __post_init__(self):
+        self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._worker: Optional[threading.Thread] = None
+        self._errors: list = []
+        self._lock = threading.Lock()
+
+    # -- snapshot (caller thread, hot path) ---------------------------------
+    @staticmethod
+    def snapshot(state) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+        """Device tree -> (host arrays by pytree key, PartitionSpec texts).
+
+        Starts every leaf's D2H copy before materializing any of them, so
+        the total stall is the slowest single transfer.
+        """
+        flat = F.flatten_with_paths(state)
+        for _, leaf in flat:
+            start = getattr(leaf, "copy_to_host_async", None)
+            if callable(start):
+                try:
+                    start()
+                except Exception:
+                    pass  # non-committed/deleted arrays fall back to asarray
+        specs = {k: F.spec_text(v) for k, v in flat}
+        arrays = {k: np.asarray(v) for k, v in flat}
+        return arrays, specs
+
+    # -- save ---------------------------------------------------------------
+    def save(self, state, step: int, extra: Optional[Dict[str, Any]] = None) -> None:
+        """Snapshot now; serialize and commit in the background."""
+        self.check()
+        arrays, specs = self.snapshot(state)
+        if not self.background:
+            self._write(int(step), arrays, specs, extra)
+            return
+        self._ensure_worker()
+        self._q.put((int(step), arrays, specs, extra))
+
+    def _ensure_worker(self):
+        with self._lock:
+            if self._worker is None or not self._worker.is_alive():
+                self._worker = threading.Thread(
+                    target=self._drain, daemon=True, name="repro-ckpt-writer"
+                )
+                self._worker.start()
+
+    def _drain(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                self._write(*item)
+            except BaseException as e:
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, arrays, specs, extra):
+        F.write_checkpoint(self.ckpt_dir, step, arrays, specs, extra)
+        self.prune()
+
+    # -- lifecycle ----------------------------------------------------------
+    def wait(self) -> None:
+        """Block until every queued save is committed; re-raise failures."""
+        if self._worker is not None and self._worker.is_alive():
+            self._q.join()
+        self.check()
+
+    def check(self) -> None:
+        """Surface any background write failure on the caller's thread."""
+        if self._errors:
+            raise self._errors.pop(0)
+
+    def close(self) -> None:
+        """Drain, stop the writer thread, then surface any failure — the
+        thread is shut down even when a queued write errored."""
+        if self._worker is not None and self._worker.is_alive():
+            self._q.join()
+            self._q.put(None)
+            self._worker.join(timeout=10.0)
+        self._worker = None
+        self.check()
+
+    # -- retention / discovery ----------------------------------------------
+    def prune(self) -> int:
+        """Apply the retention policy; returns how many dirs were removed."""
+        ckpts = F.list_checkpoints(self.ckpt_dir)
+        keep = self.retention.survivors([s for s, _ in ckpts])
+        n = F.sweep_aborted(self.ckpt_dir)
+        for step, path in ckpts:
+            if step not in keep:
+                shutil.rmtree(path, ignore_errors=True)
+                n += 1
+        return n
+
+    def latest(self) -> Optional[Tuple[int, str]]:
+        return F.latest_checkpoint(self.ckpt_dir)
+
+    # -- restore --------------------------------------------------------------
+    def restore(self, state_like, shardings: Any = None,
+                path: Optional[str] = None, **kw):
+        """Restore the latest committed checkpoint (or ``path``) into
+        ``state_like``'s structure, elastically re-laid-out under
+        ``shardings`` (see :func:`repro.ckpt.elastic.restore`)."""
+        self.wait()
+        return E.restore(state_like, path or self.ckpt_dir, shardings, **kw)

@@ -1,0 +1,45 @@
+"""HF-style export — Modalities' "convert distributed checkpoint to
+HF-compatible" analog, relocated from ``train/checkpoint.py``.
+
+Unstacks the scan-over-layers ``[L, ...]`` dims into per-layer flat keys
+(``model.blocks.3.attn.wq`` style) so any external tool can consume the
+weights without knowing the stacked layout.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+import numpy as np
+
+from .format import flatten_with_paths
+
+_STACK_KEYS = ("blocks", "moe_blocks", "dense_blocks", "ssm_blocks",
+               "enc_blocks", "dec_blocks")
+
+
+def export_flat(params, out_dir: str, prefix: str = "model") -> str:
+    """Unstack layer dims -> per-layer flat keys; write npz + manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    flat = dict(flatten_with_paths(params))
+    out: Dict[str, np.ndarray] = {}
+    for key, leaf in flat.items():
+        arr = np.asarray(leaf)
+        parts = key.split("/")
+        if parts[0] in _STACK_KEYS:
+            stack = parts[0]
+            rest = ".".join(parts[1:])
+            for layer in range(arr.shape[0]):
+                out[f"{prefix}.{stack}.{layer}.{rest}"] = arr[layer]
+        else:
+            out[f"{prefix}.{'.'.join(parts)}"] = arr
+    path = os.path.join(out_dir, "export.npz")
+    np.savez(path, **out)
+    with open(os.path.join(out_dir, "export_manifest.json"), "w") as f:
+        json.dump(
+            {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+             for k, v in out.items()},
+            f, indent=2,
+        )
+    return path

@@ -1,0 +1,209 @@
+"""Checkpoint format: per-leaf shard files + a JSON manifest.
+
+Layout of one committed checkpoint (TensorStore-style directory of shards)::
+
+    <ckpt_dir>/
+      step_00000042/
+        manifest.json             # step, leaves: shape/dtype/spec/file
+        leaves/
+          params.blocks.attn.wq.npy
+          opt.m.blocks.attn.wq.npy
+          ...
+
+Each pytree leaf is one shard file keyed by its pytree path. On a single
+host every leaf is a single shard; the manifest records the
+``PartitionSpec`` text each leaf was saved under, so a multi-host writer
+can split the same keys into per-host files without a format change and
+an elastic reader already knows the saved layout.
+
+Commits are atomic: everything (manifest last) is written into a hidden
+``.tmp-*`` sibling directory, which is then ``os.replace``d to its final
+``step_XXXXXXXX`` name.  A ``step_*`` directory containing ``manifest.json``
+is committed; anything else is an aborted write and is ignored (and swept
+by the engine's retention pass).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import uuid
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+MANIFEST = "manifest.json"
+LEAF_DIR = "leaves"
+FORMAT_VERSION = 1
+
+_STEP_RE = re.compile(r"step_(\d+)")
+
+
+# ---------------------------------------------------------------------------
+# pytree path keys
+# ---------------------------------------------------------------------------
+def flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    """``[(key, leaf)]`` where key is the '/'-joined pytree path."""
+    import jax
+
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def leaf_filename(key: str) -> str:
+    """Shard filename for a pytree key ('' names a bare-leaf tree)."""
+    safe = key.replace("/", ".") if key else "_root"
+    return f"{safe}.npy"
+
+
+def spec_text(leaf) -> Optional[List[Any]]:
+    """The JSON form of a device array's PartitionSpec (None if unsharded)."""
+    from ..sharding.plans import spec_to_json
+
+    sharding = getattr(leaf, "sharding", None)
+    spec = getattr(sharding, "spec", None)
+    if spec is None:
+        return None
+    return spec_to_json(spec)
+
+
+# ---------------------------------------------------------------------------
+# writing
+# ---------------------------------------------------------------------------
+def step_dirname(step: int) -> str:
+    return f"step_{step:08d}"
+
+
+def parse_dtype(name: str) -> np.dtype:
+    """Manifest dtype string -> numpy dtype, including the ml_dtypes
+    extension types (bfloat16, float8_*) numpy itself cannot name."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _storable(arr: np.ndarray) -> np.ndarray:
+    """Extension dtypes (kind 'V': bfloat16, float8_*) round-trip through
+    ``np.save`` as raw void — store their bits as a uint view instead; the
+    manifest's dtype string is what reconstructs them."""
+    if arr.dtype.kind == "V":
+        return arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+    return arr
+
+
+def write_checkpoint(ckpt_dir: str, step: int,
+                     arrays: Dict[str, np.ndarray],
+                     specs: Optional[Dict[str, Any]] = None,
+                     extra: Optional[Dict[str, Any]] = None) -> str:
+    """Write one atomic checkpoint; returns the committed directory."""
+    specs = specs or {}
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, step_dirname(step))
+    tmp = os.path.join(ckpt_dir, f".tmp-{step_dirname(step)}-{uuid.uuid4().hex[:8]}")
+    os.makedirs(os.path.join(tmp, LEAF_DIR))
+    leaves: Dict[str, Dict[str, Any]] = {}
+    used: set = set()
+    try:
+        for key, arr in arrays.items():
+            arr = np.asarray(arr)
+            fn = leaf_filename(key)
+            while fn in used:  # 'a/b' and 'a.b' both map to a.b.npy
+                fn = "dup." + fn
+            used.add(fn)
+            np.save(os.path.join(tmp, LEAF_DIR, fn), _storable(arr),
+                    allow_pickle=False)
+            leaves[key] = {
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "spec": specs.get(key),
+                "file": f"{LEAF_DIR}/{fn}",
+            }
+        manifest = {
+            "format_version": FORMAT_VERSION,
+            "step": int(step),
+            "n_leaves": len(leaves),
+            "leaves": leaves,
+        }
+        if extra:
+            manifest.update(extra)
+        # the manifest is the commit marker inside the dir: written LAST
+        with open(os.path.join(tmp, MANIFEST), "w") as f:
+            json.dump(manifest, f, indent=2)
+        if os.path.isdir(final):
+            # re-save of the same step wins, but the committed dir is moved
+            # aside atomically (not rmtree'd in place): a crash mid-swap
+            # leaves only invisible .tmp-* dirs, never a torn checkpoint
+            aside = os.path.join(
+                ckpt_dir, f".tmp-replaced-{step_dirname(step)}-{uuid.uuid4().hex[:8]}")
+            os.replace(final, aside)
+            os.replace(tmp, final)
+            shutil.rmtree(aside, ignore_errors=True)
+        else:
+            os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+# ---------------------------------------------------------------------------
+# reading / discovery
+# ---------------------------------------------------------------------------
+def is_committed(step_dir: str) -> bool:
+    return os.path.isfile(os.path.join(step_dir, MANIFEST))
+
+
+def read_manifest(step_dir: str) -> Dict[str, Any]:
+    with open(os.path.join(step_dir, MANIFEST)) as f:
+        return json.load(f)
+
+
+def read_leaf(step_dir: str, entry: Dict[str, Any]) -> np.ndarray:
+    raw = np.load(os.path.join(step_dir, entry["file"]), allow_pickle=False)
+    want = parse_dtype(entry["dtype"])
+    if raw.dtype != want and raw.dtype.itemsize == want.itemsize \
+            and raw.dtype.kind in ("u", "V"):
+        # bit-reinterpret extension dtypes stored as uint (or legacy void)
+        return raw.view(want)
+    return raw
+
+
+def list_checkpoints(ckpt_dir: str) -> List[Tuple[int, str]]:
+    """All COMMITTED checkpoints as sorted ``(step, dir)`` pairs."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for fn in os.listdir(ckpt_dir):
+        m = _STEP_RE.fullmatch(fn)
+        path = os.path.join(ckpt_dir, fn)
+        if m and os.path.isdir(path) and is_committed(path):
+            out.append((int(m.group(1)), path))
+    return sorted(out)
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[Tuple[int, str]]:
+    """The newest committed checkpoint, or None."""
+    all_ = list_checkpoints(ckpt_dir)
+    return all_[-1] if all_ else None
+
+
+def sweep_aborted(ckpt_dir: str) -> int:
+    """Delete leftover ``.tmp-*`` directories from interrupted writes."""
+    if not os.path.isdir(ckpt_dir):
+        return 0
+    n = 0
+    for fn in os.listdir(ckpt_dir):
+        if fn.startswith(".tmp-"):
+            shutil.rmtree(os.path.join(ckpt_dir, fn), ignore_errors=True)
+            n += 1
+    return n

@@ -6,6 +6,7 @@ from __future__ import annotations
 import json
 from typing import Any, Dict, Optional
 
+from ..ckpt import AsyncCheckpointer, RetentionPolicy
 from ..config.registry import DEFAULT_REGISTRY as REG
 from ..configs import ARCH_IDS, get_config, get_reduced, reduce_config
 from ..configs.shapes import SHAPES, InputShape
@@ -33,6 +34,7 @@ IF.DatasetIF.register(ChunkedLMDataset)
 IF.LoaderIF.register(ShardedLoader)
 IF.LoaderIF.register(PrefetchLoader)
 IF.MeshProviderIF.register(MESH.MeshProvider)
+IF.CheckpointerIF.register(AsyncCheckpointer)
 
 _REGISTERED = False
 
@@ -128,6 +130,19 @@ def register_all() -> None:
          lambda dataset, n_samples=16, offset=None, batch=4:
          PerplexityEvaluator(dataset, n_samples, offset, batch))
 
+    # -- checkpointers (elastic checkpoint subsystem, repro.ckpt) -----------
+    _reg("checkpointer", "async",
+         lambda ckpt_dir, keep_last=3, keep_every=0:
+         AsyncCheckpointer(ckpt_dir,
+                           RetentionPolicy(int(keep_last), int(keep_every))),
+         IF.CheckpointerIF)
+    _reg("checkpointer", "sync",
+         lambda ckpt_dir, keep_last=3, keep_every=0:
+         AsyncCheckpointer(ckpt_dir,
+                           RetentionPolicy(int(keep_last), int(keep_every)),
+                           background=False),
+         IF.CheckpointerIF)
+
     # -- trackers ---------------------------------------------------------------
     _reg("tracker", "stdout", lambda prefix="": _StdoutTracker(prefix),
          IF.TrackerIF)
@@ -137,12 +152,13 @@ def register_all() -> None:
     _reg("gym", "standard",
          lambda model, optimizer, loader, mesh_provider=None, sharding_plan=None,
                 seed=0, grad_accum=1, log_every=10, eval_every=0, ckpt_every=0,
-                ckpt_dir="", prefetch=2, tracker=None:
+                ckpt_dir="", checkpointer=None, prefetch=2, tracker=None:
          Gym(model=model, optimizer=optimizer, loader=loader,
              mesh=_build_mesh(mesh_provider),
              plan=sharding_plan, seed=seed, grad_accum=grad_accum,
              log_every=log_every, eval_every=eval_every, ckpt_every=ckpt_every,
-             ckpt_dir=ckpt_dir, prefetch=prefetch, logger=tracker),
+             ckpt_dir=ckpt_dir or getattr(checkpointer, "ckpt_dir", ""),
+             checkpointer=checkpointer, prefetch=prefetch, logger=tracker),
          Gym)
 
 

@@ -6,14 +6,18 @@ no architecture- or strategy-specific logic (that's the whole point).
 
 Hot-path notes: the loader is wrapped in a :class:`PrefetchLoader` (a
 background thread keeps the next ``prefetch`` batches on device, sharded per
-the plan), and metrics stay on device between log points — one
+the plan), metrics stay on device between log points — one
 ``jax.device_get`` per ``log_every`` window, flushed one window late so the
-fetch never blocks dispatch of the current step."""
+fetch never blocks dispatch of the current step — and checkpoints route
+through the async engine (:mod:`repro.ckpt`): the loop pays only for the
+overlapped device->host snapshot, serialization happens on a writer
+thread."""
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 
@@ -36,6 +40,8 @@ class Gym:
     eval_every: int = 0
     ckpt_every: int = 0
     ckpt_dir: str = ""
+    checkpointer: Any = None              # CheckpointerIF (default: async)
+    run_fingerprint: str = ""             # stamped into manifests; checked on restore
     prefetch: int = 2                     # device-prefetch depth (0 = sync)
     eval_fn: Optional[Callable] = None
     logger: Optional[Callable[[Dict[str, Any]], None]] = None
@@ -52,17 +58,11 @@ class Gym:
             grad_accum=self.grad_accum,
         )
         if self.mesh is not None:
-            pshapes = jax.eval_shape(self.model.init, jax.random.PRNGKey(self.seed))
-            pspecs, self.shard_warnings = PL.param_shardings(
-                self.plan, self.mesh, pshapes, self.model.param_axes()
+            state_sh, self.shard_warnings = PL.train_state_shardings(
+                self.plan, self.mesh, self.model, self.optimizer,
+                seed=self.seed,
             )
-            rep = jax.sharding.NamedSharding(self.mesh, jax.sharding.PartitionSpec())
-            opt_shapes = jax.eval_shape(self.optimizer.init, pshapes)
-            state_sh = {
-                "params": pspecs,
-                "opt": ST.opt_state_shardings(opt_shapes, pspecs, rep),
-                "step": rep,
-            }
+            self._state_sh = state_sh
             self._step = jax.jit(step_fn, in_shardings=(state_sh, None),
                                  out_shardings=(state_sh, None),
                                  donate_argnums=(0,))
@@ -73,11 +73,80 @@ class Gym:
                 )(jax.random.PRNGKey(self.seed))
         else:
             self.shard_warnings = []
+            self._state_sh = None
             self._step = jax.jit(step_fn, donate_argnums=(0,))
             state = ST.init_train_state(
                 self.model, self.optimizer, jax.random.PRNGKey(self.seed)
             )
         return state
+
+    # -- checkpointing -----------------------------------------------------
+    def _ckpt(self):
+        """The checkpointer this gym saves/restores through: the injected
+        registry component, or a default async engine on ``ckpt_dir``."""
+        if self.checkpointer is not None:
+            return self.checkpointer
+        if not self.ckpt_dir:
+            return None
+        from ..ckpt import AsyncCheckpointer
+
+        self.checkpointer = AsyncCheckpointer(self.ckpt_dir)
+        return self.checkpointer
+
+    def save_policy(self, step: int) -> bool:
+        """Does this step checkpoint? The ``ckpt_every`` knob (override for
+        custom cadences — e.g. denser early saves)."""
+        return bool(self.ckpt_every) and step % self.ckpt_every == 0
+
+    def restore(self, state_like, source: str = "") -> Tuple[Any, Optional[int]]:
+        """Restore the newest committed checkpoint into this gym's layout.
+
+        ``source`` may be a checkpoint directory (either format), one
+        committed ``step_XXXXXXXX`` dir, or a legacy ``.npz`` file; empty
+        means the gym's own ``ckpt_dir``.  Returns ``(state, step)`` —
+        unchanged ``(state_like, None)`` when there is nothing to restore.
+        The restored leaves are laid out under THIS gym's plan/mesh, which
+        need not match the topology the checkpoint was saved on.
+        """
+        from ..ckpt import elastic as EL
+        from ..ckpt import format as CF
+
+        ck = self._ckpt()
+        if ck is not None and hasattr(ck, "wait"):
+            ck.wait()  # queued saves must commit before "latest" is resolved
+        src = source or self.ckpt_dir
+        if not src:
+            return state_like, None
+        if os.path.isfile(src):
+            path = src
+        elif os.path.isdir(src) and CF.is_committed(src):
+            path = src
+        else:
+            latest = CK.latest_checkpoint(src)
+            if latest is None:
+                return state_like, None
+            path = latest[1]
+        state_sh = getattr(self, "_state_sh", None)
+        if os.path.isdir(path):
+            saved_fp = CF.read_manifest(path).get("fingerprint", "")
+            if saved_fp and self.run_fingerprint \
+                    and saved_fp != self.run_fingerprint:
+                # legitimate for elastic restores (a new plan/mesh changes
+                # the fingerprint) but worth surfacing: the checkpoint was
+                # written by a DIFFERENT resolved config
+                import warnings
+
+                warnings.warn(
+                    f"restoring {path} saved under fingerprint "
+                    f"{saved_fp[:22]}… into a run fingerprinted "
+                    f"{self.run_fingerprint[:22]}… — the resolved configs "
+                    f"differ", UserWarning, stacklevel=2)
+            state = EL.restore(state_like, path, state_sh)
+        else:
+            state = CK.restore_checkpoint(state_like, path)
+            if state_sh is not None:
+                state = jax.device_put(state, state_sh)
+        return state, int(jax.device_get(state["step"]))
 
     # -- input pipeline ----------------------------------------------------
     def _batch_shardings(self, batch):
@@ -127,27 +196,52 @@ class Gym:
                     self.logger(m)
             pending.clear()
 
+        # the checkpointer is consulted through save_policy (not ckpt_every
+        # directly) so a subclass can implement its own cadence
+        ckpt = self._ckpt()
         ctx = self.mesh if self.mesh is not None else _nullctx()
-        with ctx:
-            loader = self._wrapped_loader()
-            for i, batch in enumerate(loader.batches(steps, start_step=start)):
-                state, metrics = self._step(state, batch)
-                step = start + i + 1
-                if self.log_every and (step % self.log_every == 0 or i == 0):
-                    # fetch the PREVIOUS window now (long since computed —
-                    # a cheap transfer), stash the current one: dispatch of
-                    # the next step is never blocked on this step's metrics
-                    flush()
-                    pending.append((step, metrics,
-                                    round(time.time() - t0, 2)))
-                if self.eval_every and self.eval_fn and step % self.eval_every == 0:
-                    ev = self.eval_fn(self.model, state["params"])
-                    if self.logger:
-                        self.logger({"step": step, **{f"eval_{k}": v for k, v in ev.items()}})
-                if self.ckpt_every and self.ckpt_dir and step % self.ckpt_every == 0:
-                    CK.save_checkpoint(jax.device_get(state), self.ckpt_dir, step)
-            flush()
+        try:
+            with ctx:
+                loader = self._wrapped_loader()
+                for i, batch in enumerate(loader.batches(steps, start_step=start)):
+                    state, metrics = self._step(state, batch)
+                    step = start + i + 1
+                    if self.log_every and (step % self.log_every == 0 or i == 0):
+                        # fetch the PREVIOUS window now (long since computed —
+                        # a cheap transfer), stash the current one: dispatch of
+                        # the next step is never blocked on this step's metrics
+                        flush()
+                        pending.append((step, metrics,
+                                        round(time.time() - t0, 2)))
+                    if self.eval_every and self.eval_fn and step % self.eval_every == 0:
+                        ev = self.eval_fn(self.model, state["params"])
+                        if self.logger:
+                            self.logger({"step": step, **{f"eval_{k}": v for k, v in ev.items()}})
+                    if ckpt is not None and self.save_policy(step):
+                        # snapshot completes before the next step can donate
+                        # the state buffers; serialization runs on the
+                        # writer thread
+                        ckpt.save(state, step, extra=self._ckpt_extra())
+                flush()
+        finally:
+            if ckpt is not None:
+                # the run's last checkpoint must be committed and the writer
+                # thread must not outlive the run (a sweep builds one gym per
+                # trial) — even when the loop raised; close() drains first
+                # and save() after close restarts the worker
+                close = getattr(ckpt, "close", None)
+                if callable(close):
+                    close()
+                else:
+                    ckpt.wait()
         return {"state": state, "history": history}
+
+    def _ckpt_extra(self) -> Optional[Dict[str, Any]]:
+        """Manifest extras: the run fingerprint, so a restore can tell when
+        a checkpoint came from a different resolved config."""
+        if not self.run_fingerprint:
+            return None
+        return {"fingerprint": self.run_fingerprint}
 
     # -- benchmarking ------------------------------------------------------
     def bench(self, steps: int = 20, warmup: int = 3) -> Dict[str, Any]:

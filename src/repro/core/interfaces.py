@@ -58,6 +58,27 @@ class TrackerIF(abc.ABC):
     def __call__(self, metrics: Dict[str, Any]) -> None: ...
 
 
+class CheckpointerIF(abc.ABC):
+    """Checkpoint engine: async-capable save + elastic restore.
+
+    ``save`` must complete its device snapshot before returning (the gym
+    donates state buffers to the next step); ``wait`` blocks until every
+    queued save is durably committed and re-raises background failures.
+    """
+
+    @abc.abstractmethod
+    def save(self, state, step: int, extra=None) -> None: ...
+
+    @abc.abstractmethod
+    def wait(self) -> None: ...
+
+    @abc.abstractmethod
+    def latest(self): ...
+
+    @abc.abstractmethod
+    def restore(self, state_like, shardings=None, path=None): ...
+
+
 #: component_key -> interface. Plain classes act as structural IFs.
 INTERFACES: Dict[str, type] = {}
 
@@ -82,7 +103,7 @@ def register_builtin_interfaces():
             "remat_policy": object,
             "gym": Gym,
             "tracker": TrackerIF,
-            "checkpointer": object,
+            "checkpointer": CheckpointerIF,
             "exporter": object,
         }
     )

@@ -1,6 +1,7 @@
 """One CLI over the declarative run API.
 
   python -m repro train  --config run.yaml [--set path=value ...]
+  python -m repro warmstart --config run.yaml [--source ckpt_dir] [--set ...]
   python -m repro bench  --config run.yaml [--set ...]
   python -m repro dryrun --config run.yaml [--set ...] [--json out.json]
   python -m repro serve  --config run.yaml [--set ...]
@@ -47,6 +48,12 @@ def build_parser() -> argparse.ArgumentParser:
     sub = ap.add_subparsers(dest="command", required=True)
 
     _add_kind_parser(sub, "train", "resolve the graph and drive the gym")
+    w = _add_kind_parser(sub, "warmstart",
+                         "train from another run's checkpoint under this "
+                         "run's (possibly different) sharding plan/mesh")
+    w.add_argument("--source", default="",
+                   help="checkpoint dir (shorthand for "
+                        "--set run.warmstart.source=...)")
     _add_kind_parser(sub, "bench",
                      "measure compile / steady-state step time / tokens-sec "
                      "for a config; writes BENCH_<name>.json")
@@ -91,6 +98,7 @@ def _load_doc(path: str):
 
 def _parse_from_args(args, kind: str):
     from . import api
+    from . import kinds as _kinds  # noqa: F401  (registers run kinds, e.g. warmstart)
     from .config import parse_run_doc
     from .overrides import apply_overrides, parse_overrides
 
@@ -109,11 +117,13 @@ def _parse_from_args(args, kind: str):
 
 
 def _cmd_kind(args, kind: str) -> int:
+    if kind == "warmstart" and getattr(args, "source", ""):
+        args.sets.append(f"run.warmstart.source={args.source}")
     api, cfg = _parse_from_args(args, kind)
     log = lambda msg: print(msg, flush=True)  # noqa: E731
     options = {"verbose": True}
     result = api.execute(cfg, options=options, log=log)
-    if kind == "train":
+    if kind in ("train", "warmstart"):
         if result.get("logged_points"):
             print(f"done: {result['logged_points']} logged points; first loss "
                   f"{result['first_loss']:.4f} -> last "

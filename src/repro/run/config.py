@@ -33,12 +33,68 @@ class RunError(Exception):
 # per-kind settings (typed; unknown keys are rejected at parse time)
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
+class WarmstartSettings:
+    """``run.train.warmstart``: initialize from a checkpoint saved under a
+    (possibly different) sharding plan / mesh — the checkpoint-conversion
+    path.  ``optimizer: fresh`` takes only the params (a new run with
+    pretrained weights); ``carry`` also restores the optimizer moments and
+    master weights.  ``strict: false`` keeps freshly-initialized values for
+    leaves the checkpoint does not have (partial warmstart, e.g. a resized
+    head)."""
+
+    source: str = ""              # ckpt dir or one committed step_* dir
+    optimizer: str = "fresh"      # fresh | carry
+    strict: bool = True
+
+    def __post_init__(self):
+        if not self.source:
+            raise RunError("warmstart needs 'source': a checkpoint "
+                           "directory or committed step_XXXXXXXX dir")
+        if self.optimizer not in ("fresh", "carry"):
+            raise RunError(f"warmstart.optimizer must be fresh|carry, "
+                           f"got {self.optimizer!r}")
+
+
+@dataclasses.dataclass
 class TrainSettings:
-    """``run.train``: drive the resolved gym."""
+    """``run.train``: drive the resolved gym.
+
+    ``steps`` is the TOTAL step budget: a run resumed at committed step R
+    trains the remaining ``steps - R`` (so an interrupted run and an
+    uninterrupted one of the same budget produce the same loss curve).
+    ``resume`` is ``false`` | ``true``/``auto`` (find the latest committed
+    checkpoint in the gym's checkpoint dir).  ``warmstart`` (mutually
+    exclusive with resume) initializes from another run's checkpoint under
+    this run's topology."""
 
     steps: int = 100
-    resume: bool = False
+    resume: Any = False           # false | true | "auto"
+    warmstart: Any = None         # mapping -> WarmstartSettings
     gym_key: str = "gym"          # top-level graph entry that is the gym
+
+    def __post_init__(self):
+        if isinstance(self.resume, str):
+            if self.resume != "auto":
+                raise RunError(f"run.train.resume must be true|false|auto, "
+                               f"got {self.resume!r}")
+        elif not isinstance(self.resume, bool):
+            raise RunError(f"run.train.resume must be true|false|auto, "
+                           f"got {self.resume!r}")
+        if isinstance(self.warmstart, dict):
+            fields = {f.name for f in dataclasses.fields(WarmstartSettings)}
+            unknown = set(self.warmstart) - fields
+            if unknown:
+                raise RunError(f"run.train.warmstart: unknown keys "
+                               f"{sorted(unknown)}; accepted: {sorted(fields)}")
+            self.warmstart = WarmstartSettings(**self.warmstart)
+        elif self.warmstart is not None and not isinstance(
+                self.warmstart, WarmstartSettings):
+            raise RunError("run.train.warmstart must be a mapping "
+                           "(source/optimizer/strict)")
+        if self.warmstart is not None and self.resume:
+            raise RunError("run.train: resume and warmstart are mutually "
+                           "exclusive (resume continues THIS run; warmstart "
+                           "starts a new one from another run's checkpoint)")
 
 
 @dataclasses.dataclass

@@ -23,6 +23,7 @@ from .config import (
     ServeSettings,
     TraceSettings,
     TrainSettings,
+    WarmstartSettings,
     register_run_settings,
 )
 
@@ -72,6 +73,68 @@ def _loader_tokens(gym, steps: int) -> Optional[int]:
 # ---------------------------------------------------------------------------
 # train
 # ---------------------------------------------------------------------------
+def _apply_warmstart(gym, state, ws: WarmstartSettings, ctx) -> Any:
+    """Init params (and optionally optimizer state) from another run's
+    checkpoint, re-laid-out under THIS gym's plan/mesh — the Modalities
+    checkpoint-conversion path.  The step counter stays 0: a warmstart is
+    a new run, not a resume."""
+    from ..ckpt import elastic as EL
+
+    source = ws.source
+    if not os.path.isabs(source) and not os.path.exists(source):
+        cand = os.path.join(ctx.cfg.config_dir, source)
+        if os.path.exists(cand):
+            source = cand  # relative to the run YAML, like sweep base_config
+    sh = getattr(gym, "_state_sh", None)
+    if ws.optimizer == "carry":
+        # params + optimizer state restore in ONE call, so f32 master
+        # copies correctly suppress the compute params' lossy-cast warning
+        donor_has_masters = any(k.startswith("opt/master/")
+                                for k in EL.manifest_keys(source))
+        opt_like, opt_sh = state["opt"], sh["opt"] if sh else None
+        if not donor_has_masters and isinstance(opt_like, dict) \
+                and "master" in opt_like:
+            # masters are derivable from the restored params — exempt them
+            # from strictness instead of forcing strict: false everywhere
+            opt_like = {k: v for k, v in opt_like.items() if k != "master"}
+            if opt_sh is not None:
+                opt_sh = {k: v for k, v in opt_sh.items() if k != "master"}
+        sub = EL.restore({"params": state["params"], "opt": opt_like},
+                         source,
+                         {"params": sh["params"], "opt": opt_sh}
+                         if sh else None,
+                         strict=ws.strict)
+        state = dict(state, params=sub["params"],
+                     opt=dict(state["opt"], **sub["opt"]))
+        if not donor_has_masters:
+            # the target's masters kept their random init: rebase them
+            state = _rebase_master(state, sh)
+    else:
+        params = EL.restore(state["params"], source,
+                            sh["params"] if sh else None,
+                            prefix="params", strict=ws.strict)
+        state = _rebase_master(dict(state, params=params), sh)
+    ctx.log(f"warmstart: params from {source} "
+            f"(optimizer={ws.optimizer}, strict={ws.strict})")
+    return state
+
+
+def _rebase_master(state, sh):
+    """Point a master-weights optimizer's f32 copies at the (re)stored
+    params — AdamW derives params from ``opt.master`` every update, so a
+    stale random-init master would silently undo a warmstart at step 1."""
+    opt = state["opt"]
+    if not (isinstance(opt, dict) and "master" in opt):
+        return state
+    import jax
+
+    master = jax.tree_util.tree_map(lambda p, m: p.astype(m.dtype),
+                                    state["params"], opt["master"])
+    if sh is not None:
+        master = jax.device_put(master, sh["opt"]["master"])
+    return dict(state, opt=dict(opt, master=master))
+
+
 def execute_train(ctx) -> Dict[str, Any]:
     s: TrainSettings = ctx.cfg.settings
     graph = _resolve_graph(ctx)
@@ -79,30 +142,89 @@ def execute_train(ctx) -> Dict[str, Any]:
         raise RunError(f"resolved config has no {s.gym_key!r} entry; "
                        f"top-level entries: {sorted(graph)}")
     gym = graph[s.gym_key]
-    state = gym.setup()
-    if s.resume and gym.ckpt_dir:
-        from ..train.checkpoint import latest_checkpoint, restore_checkpoint
+    # a run that checkpoints but names no directory lands in the run dir —
+    # and a resuming run looks there even when IT doesn't checkpoint
+    if (getattr(gym, "ckpt_every", 0) or s.resume) \
+            and not getattr(gym, "ckpt_dir", "") and ctx.cfg.output_dir:
+        gym.ckpt_dir = os.path.join(ctx.cfg.output_dir, "ckpt")
+    if hasattr(gym, "run_fingerprint") and not gym.run_fingerprint:
+        # stamped into ckpt manifests and compared on restore. Fingerprint
+        # of the COMPONENT GRAPH only: run settings (steps, resume) change
+        # across a legitimate resume; the trained system must not
+        from .fingerprint import fingerprint as _fp
 
-        latest = latest_checkpoint(gym.ckpt_dir)
-        if latest:
-            ctx.log(f"resuming from step {latest[0]}")
-            state = restore_checkpoint(state, latest[1])
+        gym.run_fingerprint = _fp(
+            {k: v for k, v in ctx.resolved_doc.items() if k != "run"})
+    state = gym.setup()
+    resumed_from = None
+    if s.warmstart is not None:
+        state = _apply_warmstart(gym, state, s.warmstart, ctx)
+    elif s.resume:
+        state, resumed_from = gym.restore(state)
+        if resumed_from is not None:
+            ctx.log(f"resume: continuing from committed step {resumed_from}")
+        else:
+            ctx.log("resume: no committed checkpoint found, "
+                    "starting from step 0")
+    # `steps` is the TOTAL budget: a resumed run trains only the remainder,
+    # so interrupted + resumed reproduces the uninterrupted loss curve
+    steps = max(0, s.steps - (resumed_from or 0))
     t0 = time.time()
-    out = gym.run(s.steps, state=state)
+    out = gym.run(steps, state=state)
     wall = time.time() - t0
     hist = out["history"]
     result: Dict[str, Any] = {
         "steps": s.steps,
+        "steps_this_run": steps,
         "wall_s": round(wall, 2),
         "logged_points": len(hist),
         "history": hist,
     }
+    if resumed_from is not None:
+        result["resumed_from"] = resumed_from
+        if steps == 0:
+            # the budget was already met: report the no-op but do NOT
+            # overwrite the completed run's result.json (its loss curve is
+            # the only record of the finished training)
+            result["_no_result_file"] = True
+    if s.warmstart is not None:
+        result["warmstart"] = dataclasses.asdict(s.warmstart)
     if hist:  # steps < log_every yields an empty history — that is not an error
         result["first_loss"] = float(hist[0]["loss"])
         result["final_loss"] = float(hist[-1]["loss"])
-    tokens = _loader_tokens(gym, s.steps)
+    tokens = _loader_tokens(gym, steps)
     if tokens is not None:
         result["tokens_per_s"] = int(tokens / wall) if wall > 0 else 0
+    return result
+
+
+# ---------------------------------------------------------------------------
+# warmstart — topology-changing init as its own run kind.  Sugar over the
+# train kind: `python -m repro warmstart` reads like what it does, and the
+# settings are flat (source/optimizer at the top instead of nested).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class WarmstartKindSettings:
+    """``run.warmstart``: train from another run's checkpoint under this
+    run's (possibly different) plan/mesh."""
+
+    source: str = ""              # checkpoint dir or committed step_* dir
+    steps: int = 100
+    optimizer: str = "fresh"      # fresh | carry
+    strict: bool = True
+    gym_key: str = "gym"
+
+
+def execute_warmstart(ctx) -> Dict[str, Any]:
+    s: WarmstartKindSettings = ctx.cfg.settings
+    train = TrainSettings(
+        steps=s.steps, gym_key=s.gym_key,
+        warmstart={"source": s.source, "optimizer": s.optimizer,
+                   "strict": s.strict},
+    )
+    cfg = dataclasses.replace(ctx.cfg, settings=train)
+    result = execute_train(dataclasses.replace(ctx, cfg=cfg))
+    result["kind"] = "warmstart"
     return result
 
 
@@ -261,6 +383,7 @@ def register_builtin_kinds() -> None:
         return
     _REGISTERED = True
     register_run_kind("train", TrainSettings, execute_train)
+    register_run_kind("warmstart", WarmstartKindSettings, execute_warmstart)
     register_run_kind("bench", BenchSettings, execute_bench)
     register_run_kind("dryrun", DryrunSettings, execute_dryrun)
     register_run_kind("serve", ServeSettings, execute_serve)

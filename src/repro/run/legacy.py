@@ -94,12 +94,13 @@ def legacy_dryrun_doc(flat: Dict[str, Any], *, kind: str = "dryrun",
 def legacy_train_doc(raw_graph: Dict[str, Any], *,
                      steps: Optional[int] = None,
                      gym_key: Optional[str] = None,
-                     resume: Optional[bool] = None,
+                     resume: Optional[Any] = None,
                      name: str = "",
                      output_dir: str = "") -> Dict[str, Any]:
     """Wrap a bare component graph (or re-head an existing run doc) as a
     train run.  ``None`` settings keep whatever the document already says
-    (so a shim without an explicit flag does not clobber the YAML)."""
+    (so a shim without an explicit flag does not clobber the YAML).
+    ``resume`` accepts the TrainSettings forms: bool or ``"auto"``."""
     doc = copy.deepcopy(raw_graph)
     run_sec = dict(doc.pop("run", {}) or {})
     settings = dict(run_sec.get("train", {}) or {})
@@ -108,7 +109,7 @@ def legacy_train_doc(raw_graph: Dict[str, Any], *,
     if gym_key is not None:
         settings["gym_key"] = gym_key
     if resume is not None:
-        settings["resume"] = bool(resume)
+        settings["resume"] = resume if isinstance(resume, str) else bool(resume)
     run_sec["kind"] = "train"
     run_sec["train"] = settings
     from .config import SETTINGS_SCHEMAS

@@ -238,6 +238,50 @@ def cache_shardings(plan: ShardingPlan, mesh: Mesh, cache_shapes,
     return jax.tree_util.tree_map_with_path(spec, cache_shapes)
 
 
+# ---------------------------------------------------------------------------
+# spec serialization (checkpoint manifests record every leaf's layout)
+# ---------------------------------------------------------------------------
+def spec_to_json(spec) -> List[Any]:
+    """PartitionSpec -> JSON-able list: each entry None | axis | [axes...]."""
+    out: List[Any] = []
+    for entry in tuple(spec):
+        if entry is None:
+            out.append(None)
+        elif isinstance(entry, (tuple, list)):
+            out.append([str(a) for a in entry])
+        else:
+            out.append(str(entry))
+    return out
+
+
+def spec_from_json(obj: Optional[List[Any]]) -> P:
+    """The inverse of :func:`spec_to_json` (None -> fully replicated)."""
+    if not obj:
+        return P()
+    entries = [tuple(e) if isinstance(e, list) else e for e in obj]
+    return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# full-train-state shardings (the gym's layout; elastic restore re-derives
+# the same pytree for a DIFFERENT plan/mesh than a checkpoint was saved on)
+# ---------------------------------------------------------------------------
+def train_state_shardings(plan: ShardingPlan, mesh: Mesh, model,
+                          optimizer, seed: int = 0) -> Tuple[Any, List[str]]:
+    """``({"params", "opt", "step"} sharding pytree, warnings)``."""
+    from ..train import steps as ST
+
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(seed))
+    pspecs, warnings = param_shardings(plan, mesh, pshapes, model.param_axes())
+    rep = NamedSharding(mesh, P())
+    opt_shapes = jax.eval_shape(optimizer.init, pshapes)
+    return {
+        "params": pspecs,
+        "opt": ST.opt_state_shardings(opt_shapes, pspecs, rep),
+        "step": rep,
+    }, warnings
+
+
 def mesh_context(plan: ShardingPlan, mesh: Mesh) -> B.MeshContext:
     return B.MeshContext(
         mesh=mesh,

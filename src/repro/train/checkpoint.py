@@ -1,12 +1,21 @@
-"""Checkpointing: native (pytree-preserving) save/restore + HF-style export.
+"""Legacy checkpoint surface — a thin compatibility shim over
+:mod:`repro.ckpt` (the elastic checkpointing subsystem).
 
-Native format: one .npz of flattened leaves keyed by pytree path + a JSON
-manifest (step, shapes, dtypes, sharding specs as text). On multi-host this
-would write per-host shard files; the manifest already records the layout.
+Kept so existing imports (``save_checkpoint`` / ``latest_checkpoint`` /
+``restore_checkpoint`` / ``export_flat``) keep working:
 
-Export: Modalities' "convert distributed checkpoint to HF-compatible" analog
-— unstacks the [L, ...] layer dims into per-layer flat keys
-(``model.layers.3.attn.wq`` style) so any external tool can consume it.
+- ``save_checkpoint`` still writes the historic single-``.npz`` format,
+  but atomically (tmp file + ``os.replace``) — a killed run can no longer
+  leave a truncated checkpoint that later "restores".
+- ``latest_checkpoint`` finds the newest legacy ``.npz`` *or* committed
+  sharded checkpoint directory, so callers transparently pick up
+  checkpoints written by the new engine.
+- ``restore_checkpoint`` dispatches on what the path is (npz vs sharded
+  dir) and warns on lossy dtype casts (``LossyCastWarning``) instead of
+  silently truncating f32 master weights into bf16.
+
+New code should use :class:`repro.ckpt.AsyncCheckpointer` and
+:func:`repro.ckpt.restore` directly.
 """
 from __future__ import annotations
 
@@ -18,49 +27,67 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
+from ..ckpt import elastic as _elastic
+from ..ckpt import format as _format
+from ..ckpt.elastic import LossyCastWarning  # noqa: F401  (public re-export)
+from ..ckpt.export import export_flat  # noqa: F401  (public re-export)
+
 
 def _flatten(tree) -> Dict[str, Any]:
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    out = {}
-    for path, leaf in flat:
-        key = "/".join(
-            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
-        )
-        out[key] = leaf
-    return out
+    return dict(_format.flatten_with_paths(tree))
 
 
 def save_checkpoint(state, ckpt_dir: str, step: int) -> str:
+    """Atomic legacy save: one ``.npz`` of flattened leaves + manifest."""
     os.makedirs(ckpt_dir, exist_ok=True)
-    flat = _flatten(state)
-    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    arrays = {k: np.asarray(v) for k, v in _flatten(state).items()}
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
-    np.savez(path, **arrays)
-    manifest = {
-        "step": step,
-        "leaves": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
-                   for k, a in arrays.items()},
-    }
-    with open(os.path.join(ckpt_dir, f"step_{step:08d}.json"), "w") as f:
-        json.dump(manifest, f, indent=2)
+    mpath = os.path.join(ckpt_dir, f"step_{step:08d}.json")
+    tmp = path + f".tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:  # file handle: savez cannot append ".npz"
+            np.savez(f, **arrays)
+        manifest = {
+            "step": step,
+            "leaves": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                       for k, a in arrays.items()},
+        }
+        with open(mpath + ".tmp", "w") as f:
+            json.dump(manifest, f, indent=2)
+        os.replace(mpath + ".tmp", mpath)
+        os.replace(tmp, path)  # the .npz is the commit marker: renamed last
+    except BaseException:
+        for p in (tmp, mpath + ".tmp"):
+            if os.path.exists(p):
+                os.remove(p)
+        raise
     return path
 
 
 def latest_checkpoint(ckpt_dir: str) -> Optional[Tuple[int, str]]:
-    if not os.path.isdir(ckpt_dir):
-        return None
-    best = None
-    for fn in os.listdir(ckpt_dir):
-        m = re.fullmatch(r"step_(\d+)\.npz", fn)
-        if m:
-            step = int(m.group(1))
-            if best is None or step > best[0]:
-                best = (step, os.path.join(ckpt_dir, fn))
+    """Newest checkpoint: legacy ``.npz`` files AND committed sharded dirs."""
+    best: Optional[Tuple[int, str]] = None
+    if os.path.isdir(ckpt_dir):
+        for fn in os.listdir(ckpt_dir):
+            m = re.fullmatch(r"step_(\d+)\.npz", fn)
+            if m:
+                step = int(m.group(1))
+                if best is None or step > best[0]:
+                    best = (step, os.path.join(ckpt_dir, fn))
+    sharded = _format.latest_checkpoint(ckpt_dir)
+    if sharded is not None and (best is None or sharded[0] > best[0]):
+        best = sharded
     return best
 
 
 def restore_checkpoint(state_like, path: str):
-    """Restore into the structure of ``state_like`` (shapes must match)."""
+    """Restore into the structure of ``state_like`` (shapes must match).
+
+    Accepts either format; lossy dtype casts (e.g. f32 master weights into
+    a bf16 tree) raise :class:`LossyCastWarning`.
+    """
+    if os.path.isdir(path):
+        return _elastic.restore(state_like, path)
     data = np.load(path)
     flat_keys = _flatten(state_like)
     leaves, treedef = jax.tree_util.tree_flatten(state_like)
@@ -72,38 +99,6 @@ def restore_checkpoint(state_like, path: str):
         assert tuple(arr.shape) == tuple(like.shape), (
             f"{k}: checkpoint {arr.shape} vs state {like.shape}"
         )
-        restored.append(jax.numpy.asarray(arr, dtype=like.dtype))
+        arr = _elastic.cast_leaf(arr, like.dtype, key=k)
+        restored.append(jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, restored)
-
-
-# ---------------------------------------------------------------------------
-# HF-style export
-# ---------------------------------------------------------------------------
-_STACK_KEYS = ("blocks", "moe_blocks", "dense_blocks", "ssm_blocks",
-               "enc_blocks", "dec_blocks")
-
-
-def export_flat(params, out_dir: str, prefix: str = "model") -> str:
-    """Unstack layer dims -> per-layer flat keys; write npz + manifest."""
-    os.makedirs(out_dir, exist_ok=True)
-    flat = _flatten(params)
-    out: Dict[str, np.ndarray] = {}
-    for key, leaf in flat.items():
-        arr = np.asarray(leaf)
-        parts = key.split("/")
-        if parts[0] in _STACK_KEYS:
-            stack = parts[0]
-            rest = ".".join(parts[1:])
-            for layer in range(arr.shape[0]):
-                out[f"{prefix}.{stack}.{layer}.{rest}"] = arr[layer]
-        else:
-            out[f"{prefix}.{'.'.join(parts)}"] = arr
-    path = os.path.join(out_dir, "export.npz")
-    np.savez(path, **out)
-    with open(os.path.join(out_dir, "export_manifest.json"), "w") as f:
-        json.dump(
-            {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
-             for k, v in out.items()},
-            f, indent=2,
-        )
-    return path

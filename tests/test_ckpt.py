@@ -1,0 +1,657 @@
+"""The elastic checkpointing subsystem (repro.ckpt): format atomicity,
+async engine + retention, elastic cross-topology restore, dtype-cast
+rules, and the Run API resume/warmstart surface.
+
+Multi-device (elastic) cases run in a subprocess because device count is
+locked at first jax init — the test session itself stays single-device.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (
+    AsyncCheckpointer,
+    LossyCastWarning,
+    RetentionPolicy,
+    RestoreError,
+    latest_checkpoint,
+    list_checkpoints,
+    read_manifest,
+    restore,
+    write_checkpoint,
+)
+from repro.ckpt import format as CF
+from repro.configs import get_reduced
+from repro.core.gym import Gym
+from repro.data.packed_dataset import (
+    ChunkedLMDataset,
+    ShardedLoader,
+    synthetic_dataset,
+)
+from repro.models import build_model
+from repro.optim.adamw import AdamW
+from repro.sharding import plans as PL
+from repro.train import checkpoint as CK
+from repro.train import steps as ST
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _tiny(tmp_path, n_layers=1, master_weights=False):
+    cfg = get_reduced("stablelm_1p6b").with_(n_layers=n_layers)
+    model = build_model(cfg)
+    opt = AdamW(lr=1e-3, master_weights=master_weights)
+    state = ST.init_train_state(model, opt, jax.random.PRNGKey(0))
+    ds = synthetic_dataset(40000, cfg.vocab, str(tmp_path / "data"), seed=2)
+    loader = ShardedLoader(ChunkedLMDataset(ds, 32, seed=0), global_batch=4)
+    return cfg, model, opt, state, loader
+
+
+# ---------------------------------------------------------------------------
+# format layer
+# ---------------------------------------------------------------------------
+def test_format_roundtrip_and_manifest(tmp_path):
+    tree = {"params": {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+                       "b": np.ones(3, np.float32)},
+            "step": np.int32(7)}
+    arrays = dict(CF.flatten_with_paths(tree))
+    path = write_checkpoint(str(tmp_path), 7, arrays,
+                            specs={"params/w": ["data", None]})
+    assert os.path.basename(path) == "step_00000007"
+    man = read_manifest(path)
+    assert man["step"] == 7 and man["n_leaves"] == 3
+    assert man["leaves"]["params/w"]["spec"] == ["data", None]
+    assert man["leaves"]["params/w"]["dtype"] == "float32"
+    back = restore(tree, path)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_uncommitted_and_tmp_dirs_are_invisible(tmp_path):
+    d = str(tmp_path)
+    write_checkpoint(d, 5, {"x": np.zeros(2, np.float32)})
+    # an aborted write: tmp dir that never got renamed
+    os.makedirs(os.path.join(d, ".tmp-step_00000009-dead"))
+    # a torn dir: right name, no manifest (crash between mkdir and commit
+    # cannot happen with rename-commit, but a hand-rolled copy could)
+    os.makedirs(os.path.join(d, "step_00000011"))
+    assert [s for s, _ in list_checkpoints(d)] == [5]
+    assert latest_checkpoint(d)[0] == 5
+    assert CF.sweep_aborted(d) == 1
+    assert not any(fn.startswith(".tmp-") for fn in os.listdir(d))
+
+
+def test_spec_json_roundtrip():
+    P = jax.sharding.PartitionSpec
+    for spec in (P(), P("data"), P(None, "model"),
+                 P(("pod", "data"), None, "model")):
+        assert PL.spec_from_json(PL.spec_to_json(spec)) == spec
+    assert PL.spec_from_json(None) == P()
+
+
+# ---------------------------------------------------------------------------
+# async engine
+# ---------------------------------------------------------------------------
+def test_async_save_retention_and_latest(tmp_path):
+    d = str(tmp_path / "ck")
+    ck = AsyncCheckpointer(d, RetentionPolicy(keep_last=2, keep_every=20))
+    tree = {"w": jnp.arange(4, dtype=jnp.float32), "step": jnp.int32(0)}
+    for step in (10, 20, 30, 40):
+        ck.save(dict(tree, step=jnp.int32(step)), step)
+    ck.wait()
+    kept = [s for s, _ in list_checkpoints(d)]
+    # keep_last=2 -> {30, 40}; keep_every=20 -> 20 survives as a milestone
+    assert kept == [20, 30, 40]
+    assert ck.latest()[0] == 40
+    back = ck.restore(tree)
+    assert int(np.asarray(dict(CF.flatten_with_paths(back))["step"])) == 40
+
+
+def test_async_error_surfaces_on_wait(tmp_path):
+    blocker = tmp_path / "ck"
+    blocker.write_text("not a directory")
+    ck = AsyncCheckpointer(str(blocker))
+    ck.save({"w": jnp.zeros(2)}, 1)
+    with pytest.raises(Exception):
+        ck.wait()
+
+
+def test_sync_checkpointer_same_format(tmp_path):
+    d = str(tmp_path / "ck")
+    ck = AsyncCheckpointer(d, background=False)
+    ck.save({"w": jnp.arange(3, dtype=jnp.float32)}, 2)
+    assert latest_checkpoint(d)[0] == 2
+    man = read_manifest(latest_checkpoint(d)[1])
+    assert man["leaves"]["w"]["shape"] == [3]
+
+
+def test_checkpointer_registry_component(tmp_path):
+    import repro.core.components  # noqa: F401
+    from repro.config.registry import DEFAULT_REGISTRY as REG
+    from repro.core import interfaces as IF
+
+    ck = REG.build("checkpointer", "async", ckpt_dir=str(tmp_path / "c"),
+                   keep_last=1)
+    assert isinstance(ck, IF.CheckpointerIF)
+    ck.save({"w": jnp.zeros(2)}, 1)
+    ck.save({"w": jnp.zeros(2)}, 2)
+    ck.wait()
+    ck.prune()
+    assert [s for s, _ in list_checkpoints(str(tmp_path / "c"))] == [2]
+
+
+# ---------------------------------------------------------------------------
+# dtype-cast rules
+# ---------------------------------------------------------------------------
+def test_lossy_cast_warns_f32_into_bf16(tmp_path):
+    src = {"params": {"w": np.linspace(0, 1, 8, dtype=np.float32)}}
+    path = write_checkpoint(str(tmp_path), 1,
+                            dict(CF.flatten_with_paths(src)))
+    like = {"params": {"w": jnp.zeros(8, jnp.bfloat16)}}
+    with pytest.warns(LossyCastWarning, match="params/w"):
+        out = restore(like, path)
+    assert jax.tree_util.tree_leaves(out)[0].dtype == jnp.bfloat16
+
+
+def test_widening_cast_does_not_warn(tmp_path):
+    src = {"w": np.ones(4, np.float16), "n": np.int16(3)}
+    path = write_checkpoint(str(tmp_path), 1, dict(CF.flatten_with_paths(src)))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", LossyCastWarning)
+        restore({"w": jnp.zeros(4, jnp.float32), "n": jnp.float32(0)}, path)
+
+
+def test_int_to_narrow_float_warns(tmp_path):
+    """int32 -> f32 is exact only up to 2**24 — it must count as lossy."""
+    src = {"n": np.int32(1 << 25)}
+    path = write_checkpoint(str(tmp_path), 1, dict(CF.flatten_with_paths(src)))
+    with pytest.warns(LossyCastWarning):
+        restore({"n": jnp.float32(0)}, path)
+
+
+def test_master_weights_suppress_compute_param_warning(tmp_path):
+    # f32 master copies restored alongside: the bf16 compute cast is derived
+    # data, nothing is lost -> no warning for params/w, but params/lone (no
+    # master) still warns
+    w = np.linspace(0, 1, 4, dtype=np.float32)
+    src = {"params": {"w": w, "lone": w},
+           "opt": {"master": {"w": w}}}
+    path = write_checkpoint(str(tmp_path), 1, dict(CF.flatten_with_paths(src)))
+    like = {"params": {"w": jnp.zeros(4, jnp.bfloat16),
+                       "lone": jnp.zeros(4, jnp.bfloat16)},
+            "opt": {"master": {"w": jnp.zeros(4, jnp.float32)}}}
+    with pytest.warns(LossyCastWarning) as rec:
+        restore(like, path)
+    messages = [str(r.message) for r in rec]
+    assert any("params/lone" in m for m in messages)
+    assert not any("params/w " in m for m in messages)
+
+
+def test_bf16_leaves_roundtrip_bitwise(tmp_path):
+    """np.save cannot name ml_dtypes extension types — the format stores
+    their bits as uint and the manifest dtype reconstructs them."""
+    src = {"w": jnp.linspace(-2, 2, 16, dtype=jnp.float32).astype(jnp.bfloat16),
+           "s": jnp.float32(1.5)}
+    arrays = dict(CF.flatten_with_paths(src))
+    path = write_checkpoint(str(tmp_path), 1, arrays)
+    assert read_manifest(path)["leaves"]["w"]["dtype"] == "bfloat16"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", LossyCastWarning)
+        out = restore({"w": jnp.zeros(16, jnp.bfloat16),
+                       "s": jnp.float32(0)}, path)
+    assert out["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(src["w"]))
+
+
+def test_params_only_restore_still_warns_despite_saved_masters(tmp_path):
+    """A fresh-optimizer warmstart discards the f32 masters, so casting the
+    restored params down IS lossy — the suppression only applies when the
+    masters are restored in the same call."""
+    w = np.linspace(0, 1, 4, dtype=np.float32)
+    src = {"params": {"w": w}, "opt": {"master": {"w": w}}}
+    path = write_checkpoint(str(tmp_path), 1, dict(CF.flatten_with_paths(src)))
+    with pytest.warns(LossyCastWarning, match="params/w"):
+        restore({"w": jnp.zeros(4, jnp.bfloat16)}, path, prefix="params")
+
+
+def test_carry_warmstart_restores_masters_jointly_no_warning(tmp_path):
+    """optimizer: carry restores params + opt in one call, so f32 masters
+    suppress the bf16 compute-param cast warning (fresh would warn)."""
+    from types import SimpleNamespace
+
+    from repro.run.config import WarmstartSettings
+    from repro.run.kinds import _apply_warmstart
+
+    w = np.linspace(0, 1, 4, dtype=np.float32)
+    src = {"params": {"w": w},
+           "opt": {"m": {"w": np.zeros(4, np.float32)},
+                   "v": {"w": np.zeros(4, np.float32)},
+                   "count": np.int32(3),
+                   "master": {"w": w}}}
+    path = write_checkpoint(str(tmp_path), 1, dict(CF.flatten_with_paths(src)))
+    state = {"params": {"w": jnp.zeros(4, jnp.bfloat16)},
+             "opt": {"m": {"w": jnp.zeros(4, jnp.float32)},
+                     "v": {"w": jnp.zeros(4, jnp.float32)},
+                     "count": jnp.int32(0),
+                     "master": {"w": jnp.zeros(4, jnp.float32)}},
+             "step": jnp.int32(0)}
+    ctx = SimpleNamespace(log=lambda m: None,
+                          cfg=SimpleNamespace(config_dir="."))
+    gym = SimpleNamespace()  # no _state_sh: single-device layout
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", LossyCastWarning)
+        out = _apply_warmstart(
+            gym, state, WarmstartSettings(source=path, optimizer="carry"), ctx)
+    np.testing.assert_array_equal(np.asarray(out["opt"]["master"]["w"]), w)
+    assert int(out["opt"]["count"]) == 3
+    assert out["params"]["w"].dtype == jnp.bfloat16
+
+    # carry from a donor WITHOUT masters: the target's masters must be
+    # rebased onto the restored params, not left at random init
+    src2 = {"params": {"w": w},
+            "opt": {"m": {"w": np.zeros(4, np.float32)},
+                    "v": {"w": np.zeros(4, np.float32)},
+                    "count": np.int32(5)}}
+    path2 = write_checkpoint(str(tmp_path / "nomaster"), 1,
+                             dict(CF.flatten_with_paths(src2)))
+    state2 = {"params": {"w": jnp.zeros(4, jnp.float32)},
+              "opt": {"m": {"w": jnp.zeros(4, jnp.float32)},
+                      "v": {"w": jnp.zeros(4, jnp.float32)},
+                      "count": jnp.int32(0),
+                      "master": {"w": jnp.full(4, -7.0, jnp.float32)}},
+              "step": jnp.int32(0)}
+    # ... and derivable masters are exempt from strictness (default strict)
+    out2 = _apply_warmstart(
+        SimpleNamespace(), state2,
+        WarmstartSettings(source=path2, optimizer="carry"), ctx)
+    np.testing.assert_array_equal(np.asarray(out2["opt"]["master"]["w"]), w)
+    assert int(out2["opt"]["count"]) == 5
+
+
+def test_fresh_warmstart_rebases_master_weights(tmp_path):
+    """A fresh master-weights optimizer must mirror the RESTORED params —
+    AdamW derives params from opt.master every update, so a stale
+    random-init master would silently undo the warmstart at step 1."""
+    from types import SimpleNamespace
+
+    from repro.run.config import WarmstartSettings
+    from repro.run.kinds import _apply_warmstart
+
+    trained = np.linspace(3, 4, 4, dtype=np.float32)
+    path = write_checkpoint(
+        str(tmp_path), 1,
+        dict(CF.flatten_with_paths({"params": {"w": trained}})))
+    state = {"params": {"w": jnp.zeros(4, jnp.bfloat16)},
+             "opt": {"m": {"w": jnp.zeros(4, jnp.float32)},
+                     "v": {"w": jnp.zeros(4, jnp.float32)},
+                     "count": jnp.int32(0),
+                     "master": {"w": jnp.full(4, -7.0, jnp.float32)}},
+             "step": jnp.int32(0)}
+    ctx = SimpleNamespace(log=lambda m: None,
+                          cfg=SimpleNamespace(config_dir="."))
+    with pytest.warns(LossyCastWarning):  # fresh DOES discard the masters
+        out = _apply_warmstart(
+            SimpleNamespace(), state,
+            WarmstartSettings(source=path, optimizer="fresh"), ctx)
+    np.testing.assert_array_equal(
+        np.asarray(out["opt"]["master"]["w"]),
+        np.asarray(out["params"]["w"]).astype(np.float32))
+    assert int(out["opt"]["count"]) == 0  # moments stay fresh
+
+
+def test_resume_auto_without_ckpt_every_on_resume_invocation(tmp_path):
+    """resume: auto must find <output_dir>/ckpt even when the resuming
+    invocation itself does not enable checkpointing."""
+    from repro.run import api
+
+    api.execute_doc(_tiny_doc(tmp_path, "trial2", 4))
+    doc = _tiny_doc(tmp_path, "trial2", 6, resume="auto")
+    del doc["gym"]["config"]["ckpt_every"]
+    res = api.execute_doc(doc, write_files=False)
+    assert res["resumed_from"] == 4 and res["steps_this_run"] == 2
+
+
+def test_legacy_restore_warns_on_lossy_cast(tmp_path):
+    """Satellite: restore_checkpoint used to silently cast f32 -> bf16."""
+    state = {"w": jnp.linspace(0, 1, 8, dtype=jnp.float32)}
+    path = CK.save_checkpoint(jax.device_get(state), str(tmp_path / "ck"), 0)
+    like = {"w": jnp.zeros(8, jnp.bfloat16)}
+    with pytest.warns(LossyCastWarning):
+        out = CK.restore_checkpoint(like, path)
+    assert jax.tree_util.tree_leaves(out)[0].dtype == jnp.bfloat16
+
+
+def test_legacy_save_is_atomic(tmp_path):
+    state = {"w": jnp.zeros(4)}
+    d = str(tmp_path / "ck")
+    path = CK.save_checkpoint(jax.device_get(state), d, 1)
+    assert os.path.exists(path)
+    assert not [f for f in os.listdir(d) if ".tmp" in f]
+    # legacy discovery sees BOTH formats and picks the newest step
+    write_checkpoint(d, 9, {"w": np.zeros(4, np.float32)})
+    step, newest = CK.latest_checkpoint(d)
+    assert step == 9 and os.path.isdir(newest)
+    back = CK.restore_checkpoint({"w": jnp.ones(4, jnp.float32)}, newest)
+    np.testing.assert_array_equal(np.asarray(back["w"]), np.zeros(4))
+
+
+def test_restore_shape_mismatch_and_missing_keys(tmp_path):
+    src = {"a": np.zeros((2, 3), np.float32)}
+    path = write_checkpoint(str(tmp_path), 1, dict(CF.flatten_with_paths(src)))
+    with pytest.raises(RestoreError, match="shape"):
+        restore({"a": jnp.zeros((3, 2))}, path)
+    with pytest.raises(RestoreError, match="missing"):
+        restore({"a": jnp.zeros((2, 3)), "b": jnp.zeros(1)}, path)
+    # strict=False keeps current values for absent keys (partial warmstart)
+    out = restore({"a": jnp.zeros((2, 3)), "b": jnp.ones(1)}, path,
+                  strict=False)
+    np.testing.assert_array_equal(np.asarray(out["b"]), np.ones(1))
+    # ... and for shape-mismatched ones (a resized head), with a warning
+    with pytest.warns(UserWarning, match="keeping the current value"):
+        out = restore({"a": jnp.full((4, 3), 9.0)}, path, strict=False)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.full((4, 3), 9.0))
+
+
+def test_range_lossy_cast_bf16_to_f16_warns(tmp_path):
+    """bf16 -> f16 gains mantissa bits but loses exponent range (inf above
+    65504) — it must count as lossy."""
+    src = {"w": np.asarray([70000.0], dtype=np.float32).astype(
+        jnp.bfloat16)}
+    path = write_checkpoint(str(tmp_path), 1, dict(CF.flatten_with_paths(src)))
+    with pytest.warns(LossyCastWarning):
+        restore({"w": jnp.zeros(1, jnp.float16)}, path)
+
+
+def test_dotted_keys_do_not_collide(tmp_path):
+    """'a/b' and 'a.b' both map to file a.b.npy; the writer must
+    disambiguate (the manifest's file field is authoritative)."""
+    tree = {"a": {"b": np.ones(2, np.float32)},
+            "a.b": np.full(2, 5.0, np.float32)}
+    path = write_checkpoint(str(tmp_path), 1, dict(CF.flatten_with_paths(tree)))
+    man = read_manifest(path)
+    assert man["leaves"]["a/b"]["file"] != man["leaves"]["a.b"]["file"]
+    out = restore({"a": {"b": jnp.zeros(2)}, "a.b": jnp.zeros(2)}, path)
+    np.testing.assert_array_equal(np.asarray(out["a"]["b"]), np.ones(2))
+    np.testing.assert_array_equal(np.asarray(out["a.b"]), np.full(2, 5.0))
+
+
+# ---------------------------------------------------------------------------
+# gym integration: async saves off the hot path + resume determinism
+# ---------------------------------------------------------------------------
+def test_gym_async_ckpt_and_resume_matches_straight(tmp_path):
+    """Train 6 straight == train 4 (async ckpts), restore, train to 6."""
+    cfg, model, opt, state, loader = _tiny(tmp_path)
+    d = str(tmp_path / "ck")
+
+    gym = Gym(model=model, optimizer=opt, loader=loader, log_every=1,
+              prefetch=0)
+    straight = gym.run(6, state=gym.setup())
+
+    gym_a = Gym(model=model, optimizer=opt, loader=loader, log_every=1,
+                prefetch=0, ckpt_every=2, ckpt_dir=d)
+    part = gym_a.run(4, state=gym_a.setup())
+    assert [s for s, _ in list_checkpoints(d)] == [2, 4]
+
+    gym_b = Gym(model=model, optimizer=opt, loader=loader, log_every=1,
+                prefetch=0, ckpt_every=2, ckpt_dir=d)
+    state_b = gym_b.setup()
+    state_b, step = gym_b.restore(state_b)
+    assert step == 4
+    resumed = gym_b.run(2, state=state_b)
+
+    merged = {m["step"]: m["loss"] for m in part["history"]}
+    merged.update({m["step"]: m["loss"] for m in resumed["history"]})
+    want = {m["step"]: m["loss"] for m in straight["history"]}
+    assert set(merged) == set(want)
+    for s in want:
+        assert abs(want[s] - merged[s]) < 1e-6, (s, want[s], merged[s])
+
+
+def test_gym_restore_warns_on_fingerprint_mismatch(tmp_path):
+    """Checkpoints are stamped with the run's config fingerprint; resuming
+    under a DIFFERENT resolved config is surfaced (warning, not an error —
+    elastic restores legitimately change the fingerprint)."""
+    cfg, model, opt, state, loader = _tiny(tmp_path)
+    d = str(tmp_path / "ck")
+    gym_a = Gym(model=model, optimizer=opt, loader=loader, log_every=0,
+                prefetch=0, ckpt_every=1, ckpt_dir=d,
+                run_fingerprint="sha256:aaaa")
+    gym_a.run(1, state=gym_a.setup())
+    man = read_manifest(latest_checkpoint(d)[1])
+    assert man["fingerprint"] == "sha256:aaaa"
+
+    gym_b = Gym(model=model, optimizer=opt, loader=loader, prefetch=0,
+                ckpt_dir=d, run_fingerprint="sha256:bbbb")
+    sb = gym_b.setup()
+    with pytest.warns(UserWarning, match="fingerprint"):
+        _, step = gym_b.restore(sb)
+    assert step == 1
+    # same fingerprint: no warning
+    gym_c = Gym(model=model, optimizer=opt, loader=loader, prefetch=0,
+                ckpt_dir=d, run_fingerprint="sha256:aaaa")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", UserWarning)
+        _, step = gym_c.restore(gym_c.setup())
+    assert step == 1
+
+
+def test_gym_restore_without_checkpoint_is_noop(tmp_path):
+    cfg, model, opt, state, loader = _tiny(tmp_path)
+    gym = Gym(model=model, optimizer=opt, loader=loader,
+              ckpt_dir=str(tmp_path / "nothing"))
+    s0 = gym.setup()
+    s1, step = gym.restore(s0)
+    assert step is None and s1 is s0
+
+
+# ---------------------------------------------------------------------------
+# run API: resume auto + warmstart
+# ---------------------------------------------------------------------------
+def _tiny_doc(tmp_path, name, steps, **train):
+    prefix = str(tmp_path / "data")
+    return {
+        "run": {"kind": "train", "name": name,
+                "output_dir": str(tmp_path / name),
+                "train": {"steps": steps, **train}},
+        "arch": {"component_key": "arch_config", "variant_key": "stablelm_1p6b",
+                 "config": {"reduced": True, "n_layers": 1}},
+        "model": {"component_key": "model", "variant_key": "auto",
+                  "config": {"arch_config": {"instance_key": "arch"}}},
+        "optimizer": {"component_key": "optimizer", "variant_key": "adamw",
+                      "config": {"lr": 0.001}},
+        "dataset": {"component_key": "dataset", "variant_key": "synthetic",
+                    "config": {"n_tokens": 40000, "vocab": 512,
+                               "prefix": prefix, "seq_len": 32, "seed": 0}},
+        "loader": {"component_key": "loader", "variant_key": "sharded",
+                   "config": {"dataset": {"instance_key": "dataset"},
+                              "global_batch": 4}},
+        "gym": {"component_key": "gym", "variant_key": "standard",
+                "config": {"model": {"instance_key": "model"},
+                           "optimizer": {"instance_key": "optimizer"},
+                           "loader": {"instance_key": "loader"},
+                           "log_every": 1, "prefetch": 0,
+                           "ckpt_every": 2}},
+    }
+
+
+def test_run_api_resume_auto_total_budget(tmp_path):
+    from repro.run import api
+
+    base = api.execute_doc(_tiny_doc(tmp_path, "base", 6), write_files=False)
+    part = api.execute_doc(_tiny_doc(tmp_path, "trial", 4))
+    # default ckpt location: <output_dir>/ckpt (no ckpt_dir configured)
+    assert list_checkpoints(str(tmp_path / "trial" / "ckpt"))
+    # a same-config resume must NOT trip the fingerprint check (only the
+    # run settings changed, not the trained system)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        res = api.execute_doc(_tiny_doc(tmp_path, "trial", 6, resume="auto"))
+    assert not [w for w in rec if "fingerprint" in str(w.message)]
+    assert res["resumed_from"] == 4 and res["steps_this_run"] == 2
+
+    # a resume under a CHANGED component graph warns
+    changed = _tiny_doc(tmp_path, "trial", 6, resume="auto")
+    changed["optimizer"]["config"]["lr"] = 0.01
+    with pytest.warns(UserWarning, match="fingerprint"):
+        api.execute_doc(changed, write_files=False)
+
+    merged = {m["step"]: m["loss"] for m in part["history"]}
+    merged.update({m["step"]: m["loss"] for m in res["history"]})
+    want = {m["step"]: m["loss"] for m in base["history"]}
+    assert set(merged) == set(want)
+    for s in want:
+        assert abs(want[s] - merged[s]) < 1e-6
+
+    # a fully-complete run resumes to a no-op instead of re-training, and
+    # the completed run's result.json (its loss curve) is NOT overwritten
+    res2 = api.execute_doc(_tiny_doc(tmp_path, "trial", 6, resume="auto"))
+    assert res2["resumed_from"] == 6 and res2["steps_this_run"] == 0
+    with open(tmp_path / "trial" / "result.json") as f:
+        on_disk = json.load(f)
+    assert on_disk["history"], "no-op resume clobbered the recorded curve"
+    assert on_disk["history"][-1]["step"] == 6
+
+
+def test_run_api_warmstart_kinds(tmp_path):
+    from repro.run import api
+
+    api.execute_doc(_tiny_doc(tmp_path, "donor", 4))
+    src = str(tmp_path / "donor" / "ckpt")
+
+    doc = _tiny_doc(tmp_path, "warm", 2,
+                    warmstart={"source": src, "optimizer": "fresh"})
+    r = api.execute_doc(doc, write_files=False)
+    assert r["warmstart"]["source"] == src
+    # params came from a trained checkpoint: loss starts below fresh init
+    assert r["first_loss"] < 6.3
+
+    kind_doc = _tiny_doc(tmp_path, "warm2", 2)
+    kind_doc["run"] = {"kind": "warmstart", "name": "warm2",
+                       "output_dir": str(tmp_path / "warm2"),
+                       "warmstart": {"source": src, "steps": 2,
+                                     "optimizer": "carry"}}
+    r2 = api.execute_doc(kind_doc, write_files=False)
+    assert r2["kind"] == "warmstart" and r2["first_loss"] < 6.3
+
+
+def test_train_settings_validation():
+    from repro.run.config import RunError, TrainSettings
+
+    with pytest.raises(RunError, match="resume"):
+        TrainSettings(resume="latest")
+    with pytest.raises(RunError, match="source"):
+        TrainSettings(warmstart={})
+    with pytest.raises(RunError, match="fresh|carry"):
+        TrainSettings(warmstart={"source": "x", "optimizer": "maybe"})
+    with pytest.raises(RunError, match="mutually"):
+        TrainSettings(resume="auto", warmstart={"source": "x"})
+    s = TrainSettings(resume="auto")
+    assert s.resume == "auto"
+
+
+# ---------------------------------------------------------------------------
+# elastic: save under plan A / mesh (2,2), restore under plan B on
+# mesh (4,1) and mesh (1,1) — bitwise params and logits
+# ---------------------------------------------------------------------------
+_ELASTIC_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json, sys
+    import jax, jax.numpy as jnp, numpy as np
+    sys.path.insert(0, {src!r})
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.optim.adamw import AdamW
+    from repro.sharding import plans as PL
+    from repro.train import steps as ST
+    from repro.launch.mesh import make_local_mesh
+    from repro.ckpt import AsyncCheckpointer, restore, read_manifest, latest_checkpoint
+
+    ckdir = {ckdir!r}
+    cfg = get_reduced("qwen1p5_0p5b").with_(n_layers=2)
+    model = build_model(cfg)
+    opt = AdamW(lr=1e-3)
+    rng = jax.random.PRNGKey(0)
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab))
+    batch = {{"tokens": jnp.asarray(toks),
+              "labels": jnp.roll(jnp.asarray(toks), -1, axis=1)}}
+
+    def train(plan_name, dp, tp, steps, state_host=None, ckpt_step=None):
+        mesh = make_local_mesh(dp=dp, tp=tp)
+        plan = PL.make_plan(plan_name)
+        ctx = PL.mesh_context(plan, mesh)
+        sh, _ = PL.train_state_shardings(plan, mesh, model, opt)
+        with mesh:
+            if state_host is None:
+                state = jax.device_put(
+                    jax.device_get(ST.init_train_state(model, opt, rng)), sh)
+            else:
+                state = restore(state_host, ckdir, sh)
+            step = jax.jit(ST.make_train_step(model, opt, ctx,
+                           plan.ep_storage_axes if plan.ep else ()))
+            losses = []
+            for i in range(steps):
+                state, m = step(state, batch)
+                losses.append(float(m["loss"]))
+            if ckpt_step is not None:
+                ck = AsyncCheckpointer(ckdir)
+                ck.save(state, ckpt_step)
+                ck.wait()
+        return state, losses
+
+    # phase 1: train 2 steps under plan A on mesh (2,2), checkpoint
+    state_a, losses_a = train("fsdp_tp", 2, 2, 2, ckpt_step=2)
+    host_a = jax.device_get(state_a)
+
+    # manifest recorded the SAVED layout for at least one sharded leaf
+    man = read_manifest(latest_checkpoint(ckdir)[1])
+    n_sharded = sum(1 for v in man["leaves"].values()
+                    if v["spec"] and any(e for e in v["spec"]))
+    assert n_sharded > 0, "no leaf recorded a non-trivial PartitionSpec"
+
+    # phase 2: restore under plan B on (4,1) and on (1,1); params bitwise
+    results = {{}}
+    for plan_b, dp, tp in [("ddp", 4, 1), ("fsdp", 1, 1)]:
+        mesh = make_local_mesh(dp=dp, tp=tp)
+        plan = PL.make_plan(plan_b)
+        sh, _ = PL.train_state_shardings(plan, mesh, model, opt)
+        restored = restore(state_a, ckdir, sh)
+        host_b = jax.device_get(restored)
+        for (ka, a), (kb, b) in zip(
+                jax.tree_util.tree_flatten_with_path(host_a)[0],
+                jax.tree_util.tree_flatten_with_path(host_b)[0]):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), ka
+        # bitwise-equal logits: identical params on the default device
+        logits_a, _ = model.apply(host_a["params"], batch)
+        logits_b, _ = model.apply(host_b["params"], batch)
+        assert np.array_equal(np.asarray(logits_a), np.asarray(logits_b))
+        results[plan_b] = True
+
+    # phase 3: resumed-under-(4,1) loss curve ~ uninterrupted-(2,2) curve
+    _, losses_rest = train("ddp", 4, 1, 2, state_host=host_a, ckpt_step=None)
+    _, losses_full = train("fsdp_tp", 2, 2, 4)
+    for got, want in zip(losses_a + losses_rest, losses_full):
+        assert abs(got - want) < 2e-2, (losses_a + losses_rest, losses_full)
+
+    print(json.dumps({{"ok": True, "plans": sorted(results),
+                       "losses": losses_a + losses_rest}}))
+""")
+
+
+def test_elastic_restore_across_plans_and_meshes(tmp_path):
+    script = _ELASTIC_SCRIPT.format(src=os.path.abspath(SRC),
+                                    ckdir=str(tmp_path / "ck"))
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["ok"] and out["plans"] == ["ddp", "fsdp"]
