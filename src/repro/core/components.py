@@ -72,7 +72,7 @@ def register_all() -> None:
 
     # -- sharding plans -------------------------------------------------------
     for name in ("ddp", "fsdp", "hsdp", "fsdp_tp", "hsdp_tp", "fsdp_tp_ep",
-                 "hsdp_tp_ep"):
+                 "hsdp_tp_ep", "serve_ep"):
         _reg("sharding_plan", name,
              (lambda n: (lambda multi_pod=False: make_plan(n, multi_pod)))(name),
              ShardingPlan)

@@ -4,7 +4,7 @@ point): held-out perplexity over a dataset slice, pluggable into the gym's
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,13 +19,30 @@ class PerplexityEvaluator:
     n_samples: int = 16
     offset: Optional[int] = None  # default: tail of the dataset
     batch: int = 4
+    # the jitted loss, built once per model — a fresh jax.jit every
+    # __call__ recompiled the whole forward on every eval window.  One
+    # (model, fn) pair, not an id()-keyed dict: an evaluator serves one
+    # model, and a dict would pin every model it ever saw
+    _fn_for: Optional[tuple] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    def _loss_fn(self, model) -> Callable:
+        if self._fn_for is None or self._fn_for[0] is not model:
+            self._fn_for = (
+                model, jax.jit(lambda p, b: compute_loss(model, p, b)[0]))
+        return self._fn_for[1]
 
     def __call__(self, model, params) -> Dict[str, float]:
         n = len(self.dataset)
         start = self.offset if self.offset is not None else max(
             0, n - self.n_samples)
-        losses = []
-        fn = jax.jit(lambda p, b: compute_loss(model, p, b)[0])
+        fn = self._loss_fn(model)
+        # weight each batch's mean loss by its sample count: a ragged final
+        # batch (n_samples=10, batch=4 -> 4/4/2) must not be over-weighted
+        # (every sample holds seq_len tokens, so sample weights == token
+        # weights here)
+        total = 0.0
+        count = 0
         for lo in range(start, min(start + self.n_samples, n), self.batch):
             xs, ys = [], []
             for i in range(lo, min(lo + self.batch, n)):
@@ -34,6 +51,7 @@ class PerplexityEvaluator:
                 ys.append(y)
             batch = {"tokens": jnp.asarray(np.stack(xs)),
                      "labels": jnp.asarray(np.stack(ys))}
-            losses.append(float(fn(params, batch)))
-        mean = float(np.mean(losses)) if losses else float("nan")
+            total += float(fn(params, batch)) * len(xs)
+            count += len(xs)
+        mean = total / count if count else float("nan")
         return {"loss": mean, "ppl": float(np.exp(mean))}

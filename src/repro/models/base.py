@@ -219,6 +219,23 @@ class Model(abc.ABC):
     ) -> Tuple[jax.Array, Any]:
         raise NotImplementedError(f"{self.cfg.name}: no decode path")
 
+    def insert_cache(self, cache: Any, request_cache: Any, slot) -> Any:
+        """Write a batch=1 request cache into one slot of a slot-pool cache.
+
+        ``cache`` is a pool from ``init_cache(n_slots, max_len)`` (every leaf
+        is ``[L, n_slots, ...]`` — layer-stacked, slot axis 1); the request
+        cache comes from ``prefill`` with batch 1 and the same ``max_len``.
+        ``slot`` may be a traced scalar, so one compiled insert serves every
+        slot.  The continuous-batching engine admits mid-flight requests with
+        this (the whole slot row is overwritten — no stale state survives a
+        slot's reuse).
+        """
+        def put(c, n):
+            return jax.lax.dynamic_update_slice_in_dim(
+                c, n.astype(c.dtype), slot, axis=1)
+
+        return jax.tree_util.tree_map(put, cache, request_cache)
+
     def abstract_params(self, rng=None) -> Dict[str, Any]:
         """Shape-only params via eval_shape (dry-run, no allocation)."""
         rng = jax.random.PRNGKey(0) if rng is None else rng

@@ -394,6 +394,21 @@ class DecoderLM(B.Model):
         logits = self.logits(params, x[:, -1:], mesh_ctx)[:, 0]
         return logits, cache
 
+    def prefill_into(self, params, batch, cache, slot, max_len=None,
+                     cache_dtype=jnp.bfloat16, mesh_ctx=None, storage_axes=()):
+        """Prefill one batch=1 request directly into slot ``slot`` of an
+        existing slot-pool cache (``init_cache(n_slots, max_len)`` layout).
+
+        Returns ``(last-token logits [1, vocab], updated pool cache)`` — the
+        continuous-batching admission path: jit it with the pool donated and
+        ``slot`` traced, and one compile per prompt length serves every slot.
+        """
+        logits, req_cache = self.prefill(params, batch, max_len=max_len,
+                                         cache_dtype=cache_dtype,
+                                         mesh_ctx=mesh_ctx,
+                                         storage_axes=storage_axes)
+        return logits, self.insert_cache(cache, req_cache, slot)
+
     def _prefill_hybrid(self, params, x, positions, max_len, cache_dtype):
         cfg = self.cfg
         seg = cfg.attn_every - 1

@@ -59,7 +59,8 @@ def build_parser() -> argparse.ArgumentParser:
                      "for a config; writes BENCH_<name>.json")
     d = _add_kind_parser(sub, "dryrun", "compile-time roofline analysis")
     d.add_argument("--json", default="", help="also write the result JSON here")
-    _add_kind_parser(sub, "serve", "batched prefill + greedy decode")
+    _add_kind_parser(sub, "serve",
+                     "continuous-batching engine / static-batch shim")
     _add_kind_parser(sub, "trace", "dump the compiled collective schedule")
 
     s = _add_kind_parser(sub, "sweep", "run a declarative ablation sweep")

@@ -127,10 +127,86 @@ class BenchSettings:
 
 
 @dataclasses.dataclass
-class ServeSettings:
-    """``run.serve``: batched prefill + greedy decode.
+class SamplingSettings:
+    """``run.serve.sampling``: default sampling knobs for engine workloads.
 
-    Graph entries: ``model`` (or ``arch`` to build one).
+    ``temperature <= 0`` is greedy (the legacy behavior); ``top_k <= 0``
+    and ``top_p: 1.0`` disable those filters."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if not 0.0 < self.top_p <= 1.0:
+            raise RunError(f"run.serve.sampling.top_p must be in (0, 1], "
+                           f"got {self.top_p}")
+        if self.top_k < 0:
+            raise RunError(f"run.serve.sampling.top_k must be >= 0, "
+                           f"got {self.top_k}")
+
+
+@dataclasses.dataclass
+class WorkloadSettings:
+    """``run.serve.workload``: the seeded synthetic trace the engine serves.
+
+    ``rate`` is the Poisson arrival rate in requests/second (0 = all at
+    t=0); ``prompt_lens``/``gen_tokens`` are per-request choice sets (kept
+    small so prefill compiles stay bounded)."""
+
+    n_requests: int = 8
+    rate: float = 0.0
+    prompt_lens: Any = (16, 32)
+    gen_tokens: Any = (8, 16)
+    seed: int = 0
+    realtime: bool = True
+
+    def __post_init__(self):
+        if self.n_requests < 1:
+            raise RunError("run.serve.workload.n_requests must be >= 1")
+        for field in ("prompt_lens", "gen_tokens"):
+            val = getattr(self, field)
+            if isinstance(val, int):
+                val = (val,)
+            if not isinstance(val, (list, tuple)) or not val or not all(
+                    isinstance(v, int) and v > 0 for v in val):
+                raise RunError(f"run.serve.workload.{field} must be a "
+                               f"non-empty list of positive ints, got {val!r}")
+            setattr(self, field, list(val))  # lists: YAML-dump friendly
+
+
+def _coerce_block(kind: str, name: str, value: Any, cls: Type) -> Any:
+    """Nested settings block: mapping -> dataclass (None -> defaults)."""
+    if value is None:
+        return cls()
+    if isinstance(value, cls):
+        return value
+    if not isinstance(value, dict):
+        raise RunError(f"run.{kind}.{name} must be a mapping")
+    fields = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(value) - fields
+    if unknown:
+        raise RunError(f"run.{kind}.{name}: unknown keys {sorted(unknown)}; "
+                       f"accepted: {sorted(fields)}")
+    return cls(**value)
+
+
+@dataclasses.dataclass
+class ServeSettings:
+    """``run.serve``: inference serving.
+
+    Two modes share the engine.  ``engine: false`` (default) is the
+    static-batch shim — ``batch`` identical greedy requests, one generation
+    (the legacy benchmark, numerics-identical).  ``engine: true`` runs the
+    continuous-batching engine: ``n_slots`` cache slots, a ``workload``
+    trace with mid-flight admission, per-request ``sampling``, EOS
+    stopping, and a tracked ``BENCH_serve_<name>.json`` artifact
+    (``compare_static`` adds the equal-occupancy static-shim baseline).
+
+    Graph entries: ``model`` (or ``arch`` to build one); optional ``mesh``
+    (mesh_provider) + ``plan`` (sharding_plan) for sharded serving.
+    ``ckpt`` restores trained params (params-only) from a full-TrainState
+    training checkpoint in either format.
     """
 
     batch: int = 4
@@ -138,6 +214,23 @@ class ServeSettings:
     gen: int = 16
     ckpt: str = ""
     seed: int = 0
+    engine: bool = False
+    n_slots: int = 4
+    max_len: int = 0              # 0 => derived from the workload/static shape
+    eos_id: int = -1              # -1 => requests only stop on budget
+    sampling: Any = None          # mapping -> SamplingSettings
+    workload: Any = None          # mapping -> WorkloadSettings
+    compare_static: bool = True
+    bench_dir: str = "."          # where BENCH_serve_<name>.json lands
+
+    def __post_init__(self):
+        self.sampling = _coerce_block("serve", "sampling", self.sampling,
+                                      SamplingSettings)
+        self.workload = _coerce_block("serve", "workload", self.workload,
+                                      WorkloadSettings)
+        if self.engine and self.n_slots < 1:
+            raise RunError(f"run.serve.n_slots must be >= 1, "
+                           f"got {self.n_slots}")
 
 
 @dataclasses.dataclass

@@ -322,8 +322,67 @@ def execute_serve(ctx) -> Dict[str, Any]:
         model = build_model(_graph_get(graph, "arch", "serve"))
     from ..launch.serve import serve_benchmark
 
-    return serve_benchmark(model, batch=s.batch, prompt_len=s.prompt_len,
-                           gen=s.gen, ckpt=s.ckpt, seed=s.seed, log=ctx.log)
+    mesh_provider = graph.get("mesh")
+    mesh = mesh_provider.build() if mesh_provider is not None else None
+    plan = graph.get("plan")
+    if plan is not None and mesh is None:
+        raise RunError(
+            "run.serve: the config names a sharding 'plan' but its 'mesh' "
+            "entry is missing or builds no devices (single_device) — the "
+            "run would silently serve unsharded; add a device mesh or drop "
+            "the plan")
+    if not s.engine:
+        return serve_benchmark(model, batch=s.batch, prompt_len=s.prompt_len,
+                               gen=s.gen, ckpt=s.ckpt, seed=s.seed,
+                               mesh=mesh, plan=plan, log=ctx.log)
+
+    # -- continuous-batching engine path ------------------------------------
+    from ..serve.engine import ServeEngine, load_params
+    from ..serve.workload import synthetic_trace, trace_summary
+
+    w, samp = s.workload, s.sampling
+    max_len = s.max_len or (max(w.prompt_lens) + max(w.gen_tokens))
+    params = load_params(model, ckpt=s.ckpt, seed=s.seed)
+    engine = ServeEngine(model, params, n_slots=s.n_slots, max_len=max_len,
+                         mesh=mesh, plan=plan,
+                         greedy=samp.temperature <= 0, log=ctx.log)
+    trace = synthetic_trace(
+        w.n_requests, model.cfg.vocab, seed=w.seed, rate=w.rate,
+        prompt_lens=w.prompt_lens, gen_tokens=w.gen_tokens,
+        temperature=samp.temperature, top_k=samp.top_k, top_p=samp.top_p,
+        eos_id=s.eos_id, max_len=max_len)
+    ts = trace_summary(trace)
+    ctx.log(f"serve engine: {ts['n_requests']} requests "
+            f"({ts['prompt_tokens']} prompt tokens, gen budget "
+            f"{ts['gen_budget']}, span {ts['span_s']:.2f}s) over "
+            f"{s.n_slots} slots (max_len {max_len})")
+    result: Dict[str, Any] = engine.run(trace, realtime=w.realtime)
+    result["arch"] = model.cfg.name
+    if plan is not None:
+        result["plan"] = getattr(plan, "name", str(plan))
+    if s.compare_static:
+        # equal-footing baseline: the static-batch shim at batch=n_slots,
+        # the longest workload shape, under the SAME mesh/plan — continuous
+        # batching must not decode slower than a lockstep batch of the same
+        # width and layout
+        shim = serve_benchmark(model, batch=s.n_slots,
+                               prompt_len=max(w.prompt_lens),
+                               gen=max(w.gen_tokens), seed=s.seed,
+                               params=params, mesh=mesh, plan=plan,
+                               log=ctx.log)
+        shim.pop("generated_ids", None)
+        result["static_shim"] = shim
+    # tracked artifact per the bench conventions (gated like result.json)
+    if s.bench_dir and ctx.options.get("_write_files", True):
+        bench = {k: v for k, v in result.items() if k != "requests"}
+        path = os.path.join(s.bench_dir, f"BENCH_serve_{ctx.cfg.name}.json")
+        with open(path, "w") as f:
+            json.dump({**bench, "name": ctx.cfg.name,
+                       "fingerprint": ctx.fingerprint}, f,
+                      indent=2, default=str)
+            f.write("\n")
+        result["bench_file"] = path
+    return result
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,16 @@
+"""Continuous-batching inference (the fifth pillar: sweep, run API,
+hot path, elastic ckpt — and now serve).
+
+- :mod:`repro.serve.engine` — slot-pool scheduler + fused decode tick
+- :mod:`repro.serve.sampling` — on-device per-slot sampling head
+- :mod:`repro.serve.workload` — seeded synthetic traces + latency metrics
+"""
+from .engine import EngineError, ServeEngine, load_params
+from .sampling import request_key, sample_tokens, token_key
+from .workload import Request, percentiles, static_trace, synthetic_trace
+
+__all__ = [
+    "EngineError", "ServeEngine", "load_params",
+    "request_key", "sample_tokens", "token_key",
+    "Request", "percentiles", "static_trace", "synthetic_trace",
+]

@@ -1,0 +1,319 @@
+"""Continuous-batching serving engine (the fifth pillar).
+
+A fixed slot-pool cache (``model.init_cache(n_slots, max_len)``, allocated
+once per run) plus a host-side scheduler: queued requests are admitted into
+free slots *mid-flight* (prefill writes straight into the slot row via
+``model.prefill_into``), every tick decodes all slots in one fused jitted
+step (``train.steps.make_engine_step``: decode + on-device sampling head +
+stop flags, cache and slot state donated), and slots retire on EOS or
+budget — immediately freeing the row for the next queued request.
+
+Determinism contract: at a fixed pool shape ``(n_slots, max_len)``, a
+request's token stream depends only on its own prompt, sampling settings,
+and seed — never on slot index, admission order, or co-resident requests.
+(Fixed shape matters: XLA may fuse the tick differently per batch width,
+and the resulting 1-ulp reassociation differences can flip a sampling
+near-tie.)  ``tests/test_serve_engine.py`` asserts engine == solo across
+the GQA ring-buffer, MLA, and hybrid SSD cache families.
+
+Sharded serving reuses :mod:`repro.sharding.plans`: params laid out under
+the plan, the cache's slot axis data-sharded (``plans.cache_shardings``).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import plans as PL
+from ..train import steps as ST
+from .sampling import request_key, sample_tokens
+from .workload import Request, percentiles
+
+
+class EngineError(Exception):
+    """Engine misconfiguration (unservable arch, request does not fit)."""
+
+
+def load_params(model, ckpt: str = "", seed: int = 0):
+    """Params for serving: restore a TRAINING checkpoint (full
+    ``{params, opt, step}`` TrainState, either the sharded-dir or legacy npz
+    format) params-only — or random-init when no checkpoint is given.
+
+    With a checkpoint the target structure comes from ``jax.eval_shape``
+    (no throwaway full ``model.init`` allocation before the restore).
+    """
+    if not ckpt:
+        return model.init(jax.random.PRNGKey(seed))
+    from ..train.checkpoint import restore_params
+
+    like = jax.eval_shape(model.init, jax.random.PRNGKey(seed))
+    return restore_params(like, ckpt)
+
+
+class ServeEngine:
+    """Slot-pool continuous-batching engine over one resolved model."""
+
+    def __init__(self, model, params, *, n_slots: int, max_len: int,
+                 cache_dtype=jnp.bfloat16, mesh=None, plan=None,
+                 greedy: bool = False,
+                 log: Optional[Callable[[str], None]] = None):
+        """``greedy=True`` compiles a sampler-free decode tick — use it when
+        EVERY request this engine will serve is greedy (the static shim, or
+        an all-greedy workload); the engine rejects sampled requests then.
+        The variant is fixed per engine because greedy and general ticks
+        are different fused programs (see ``make_engine_step``)."""
+        cfg = model.cfg
+        if cfg.arch_type == "audio" or cfg.n_patches:
+            raise EngineError(
+                f"{cfg.name}: the serving engine drives text decoders; "
+                f"audio/vlm prompts need modality extras the slot scheduler "
+                f"does not carry")
+        if n_slots < 1 or max_len < 2:
+            raise EngineError(f"need n_slots >= 1 and max_len >= 2, got "
+                              f"{n_slots}/{max_len}")
+        self.model = model
+        self.n_slots = int(n_slots)
+        self.max_len = int(max_len)
+        self.cache_dtype = cache_dtype
+        self.log = log or (lambda msg: None)
+        self.mesh, self.plan = mesh, plan
+        if mesh is not None and plan is not None:
+            self.mesh_ctx = PL.mesh_context(plan, mesh)
+            pshapes = jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+            psh, self.shard_warnings = PL.param_shardings(
+                plan, mesh, pshapes, model.param_axes())
+            self.params = jax.device_put(params, psh)
+        else:
+            self.mesh_ctx = None
+            self.shard_warnings = []
+            self.params = params
+        self.greedy = bool(greedy)
+        self._tick = jax.jit(
+            ST.make_engine_step(model, self.mesh_ctx, greedy=self.greedy),
+            donate_argnums=(1, 2))
+        self._admits: Dict[int, Any] = {}   # prompt_len -> jitted admit
+
+    # -- device state ------------------------------------------------------
+    def _init_pool(self):
+        cache = self.model.init_cache(self.n_slots, self.max_len,
+                                      self.cache_dtype)
+        if self.mesh is not None and self.plan is not None:
+            cshapes = jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), cache)
+            csh = PL.cache_shardings(self.plan, self.mesh, cshapes,
+                                     self.n_slots)
+            cache = jax.device_put(cache, csh)
+        n = self.n_slots
+        slots = {
+            "tokens": jnp.zeros((n,), jnp.int32),
+            "pos": jnp.zeros((n,), jnp.int32),
+            "active": jnp.zeros((n,), bool),
+            "n_gen": jnp.zeros((n,), jnp.int32),
+            "max_gen": jnp.ones((n,), jnp.int32),
+            "eos": jnp.full((n,), -1, jnp.int32),
+            "key": jnp.zeros((n, 2), jnp.uint32),
+            "temperature": jnp.zeros((n,), jnp.float32),
+            "top_k": jnp.zeros((n,), jnp.int32),
+            "top_p": jnp.ones((n,), jnp.float32),
+        }
+        return cache, slots
+
+    def _admit_fn(self, prompt_len: int):
+        """One compiled admission per prompt length (slot index is traced)."""
+        fn = self._admits.get(prompt_len)
+        if fn is not None:
+            return fn
+        model, max_len, cache_dtype = self.model, self.max_len, self.cache_dtype
+        mesh_ctx, greedy = self.mesh_ctx, self.greedy
+
+        def admit(params, cache, slots, prompt, slot, key, temperature,
+                  top_k, top_p, max_gen, eos):
+            logits, cache = model.prefill_into(
+                params, {"tokens": prompt[None]}, cache, slot,
+                max_len=max_len, cache_dtype=cache_dtype, mesh_ctx=mesh_ctx)
+            if greedy:   # sampler-free, like the greedy tick
+                tok = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
+            else:
+                k0 = jax.random.fold_in(key, 0)   # generation index 0
+                tok = sample_tokens(logits, k0[None], temperature[None],
+                                    top_k[None], top_p[None])[0]
+            finished = (tok == eos) | (max_gen <= 1)
+            new_slots = {
+                "tokens": slots["tokens"].at[slot].set(tok),
+                "pos": slots["pos"].at[slot].set(prompt.shape[0]),
+                "active": slots["active"].at[slot].set(~finished),
+                "n_gen": slots["n_gen"].at[slot].set(1),
+                "max_gen": slots["max_gen"].at[slot].set(max_gen),
+                "eos": slots["eos"].at[slot].set(eos),
+                "key": slots["key"].at[slot].set(key),
+                "temperature": slots["temperature"].at[slot].set(temperature),
+                "top_k": slots["top_k"].at[slot].set(top_k),
+                "top_p": slots["top_p"].at[slot].set(top_p),
+            }
+            return cache, new_slots, tok, finished
+
+        fn = jax.jit(admit, donate_argnums=(1, 2))
+        self._admits[prompt_len] = fn
+        return fn
+
+    def _budget(self, r: Request) -> int:
+        P = r.prompt_len
+        if P < 1 or P >= self.max_len:
+            raise EngineError(
+                f"request {r.rid}: prompt_len {P} does not fit "
+                f"max_len {self.max_len}")
+        if self.greedy and r.temperature > 0:
+            raise EngineError(
+                f"request {r.rid}: temperature {r.temperature} on a "
+                f"greedy-tick engine (built with greedy=True)")
+        return min(int(r.max_new), self.max_len - P)
+
+    def _warmup(self, prompt_lens) -> float:
+        """Compile every jitted path a trace will hit (the tick + one admit
+        per distinct prompt length) against a sacrificial pool, so the
+        timed loop measures serving, not XLA.  Dispatch-cache hits make a
+        second run's warmup just a few fast real calls."""
+        t0 = time.perf_counter()
+        cache, slots = self._init_pool()
+        for P in sorted(set(prompt_lens)):
+            admit = self._admit_fn(P)
+            cache, slots, _, _ = admit(
+                self.params, cache, slots, jnp.zeros((P,), jnp.int32),
+                jnp.int32(0), request_key(0), jnp.float32(0.0),
+                jnp.int32(0), jnp.float32(1.0), jnp.int32(1), jnp.int32(-1))
+        out = self._tick(self.params, cache, slots)
+        jax.block_until_ready(out)
+        return time.perf_counter() - t0
+
+    # -- the scheduler loop ------------------------------------------------
+    def run(self, requests: Sequence[Request], *, realtime: bool = True,
+            warmup: bool = True) -> Dict[str, Any]:
+        """Serve a trace to completion; returns per-request rows + metrics.
+
+        ``realtime=False`` ignores arrival offsets (closed loop, maximum
+        pressure — the bench mode).  Metrics: TTFT (arrival -> first token,
+        queueing included), per-decode-token latency percentiles, tokens/s,
+        and slot utilization.  The first token of every request is sampled
+        from the prefill logits and accounted to prefill/TTFT; only
+        subsequent tokens count as decode throughput.  ``warmup`` (default)
+        compiles every path against a sacrificial pool first, so compile
+        time lands in ``compile_s`` instead of polluting every latency and
+        throughput number (and the engine-vs-shim comparison).
+        """
+        pending = deque(sorted(requests, key=lambda r: (r.arrival_s, r.rid)))
+        budgets = {r.rid: self._budget(r) for r in pending}
+        compile_s = (self._warmup([r.prompt_len for r in pending])
+                     if warmup else 0.0)
+        cache, slots = self._init_pool()
+        free: List[int] = list(range(self.n_slots))[::-1]
+        slot_req: Dict[int, Request] = {}
+        streams: Dict[int, List[int]] = {}
+        rows: Dict[int, Dict[str, Any]] = {}
+        ttfts: List[float] = []
+        tpot: List[float] = []
+        ticks = 0
+        busy_slot_ticks = 0
+        prefill_s = 0.0
+        decode_s = 0.0
+        t0 = time.perf_counter()
+
+        def retire(slot: int, r: Request) -> None:
+            stream = streams[r.rid]
+            rows[r.rid].update(
+                n_gen=len(stream),
+                gen_ids=stream,
+                finish=("eos" if r.eos_id >= 0 and stream[-1] == r.eos_id
+                        else "length"),
+                done_s=round(time.perf_counter() - t0, 6),
+            )
+            slot_req.pop(slot, None)
+            free.append(slot)
+
+        while pending or slot_req:
+            now = time.perf_counter() - t0
+            while free and pending and (not realtime
+                                        or pending[0].arrival_s <= now):
+                r = pending.popleft()
+                slot = free.pop()
+                admit = self._admit_fn(r.prompt_len)
+                ta = time.perf_counter()
+                cache, slots, tok, fin = admit(
+                    self.params, cache, slots,
+                    jnp.asarray(r.prompt, jnp.int32),
+                    jnp.int32(slot), request_key(r.seed),
+                    jnp.float32(r.temperature), jnp.int32(r.top_k),
+                    jnp.float32(r.top_p), jnp.int32(budgets[r.rid]),
+                    jnp.int32(r.eos_id))
+                tok, fin = jax.device_get((tok, fin))
+                tb = time.perf_counter()
+                prefill_s += tb - ta
+                arrival = r.arrival_s if realtime else 0.0
+                ttft = tb - t0 - arrival
+                ttfts.append(ttft)
+                streams[r.rid] = [int(tok)]
+                rows[r.rid] = {
+                    "id": r.rid, "slot": slot, "prompt_len": r.prompt_len,
+                    "max_new": budgets[r.rid], "arrival_s": arrival,
+                    "ttft_s": round(ttft, 6),
+                }
+                slot_req[slot] = r
+                if bool(fin):
+                    retire(slot, r)
+                now = time.perf_counter() - t0
+            if not slot_req:
+                if pending and realtime:
+                    time.sleep(min(max(pending[0].arrival_s - now, 0.0), 0.05))
+                continue
+            ta = time.perf_counter()
+            cache, slots, sampled, finished = self._tick(self.params, cache,
+                                                         slots)
+            sampled, finished = jax.device_get((sampled, finished))
+            dt = time.perf_counter() - ta
+            decode_s += dt
+            ticks += 1
+            busy_slot_ticks += len(slot_req)
+            for slot in list(slot_req):
+                r = slot_req[slot]
+                streams[r.rid].append(int(sampled[slot]))
+                tpot.append(dt)
+                if bool(finished[slot]):
+                    retire(slot, r)
+
+        elapsed = time.perf_counter() - t0
+        gen_tokens = sum(len(s) for s in streams.values())
+        decode_tokens = gen_tokens - len(streams)   # firsts belong to prefill
+        util = (busy_slot_ticks / (ticks * self.n_slots)) if ticks else 0.0
+        decode_tok_s = decode_tokens / decode_s if decode_s > 0 else 0.0
+        result: Dict[str, Any] = {
+            "n_slots": self.n_slots,
+            "max_len": self.max_len,
+            "n_requests": len(rows),
+            "completed": sum(1 for row in rows.values() if "n_gen" in row),
+            "generated_tokens": gen_tokens,
+            "decode_tokens": decode_tokens,
+            "compile_s": round(compile_s, 4),
+            "elapsed_s": round(elapsed, 4),
+            "prefill_s": round(prefill_s, 4),
+            "decode_s": round(decode_s, 4),
+            "ticks": ticks,
+            "tok_s": int(gen_tokens / elapsed) if elapsed > 0 else 0,
+            "decode_tok_s": int(decode_tok_s),
+            # occupancy-normalized: what decode throughput would be at 100%
+            # slot occupancy — the apples-to-apples number vs a static batch
+            "decode_tok_s_full": int(decode_tok_s / util) if util > 0 else 0,
+            "slot_utilization": round(util, 4),
+            "ttft_s": percentiles(ttfts),
+            "tpot_ms": percentiles([t * 1000 for t in tpot]),
+            "requests": [rows[rid] for rid in sorted(rows)],
+        }
+        self.log(
+            f"engine: {result['n_requests']} requests, "
+            f"{gen_tokens} tokens in {elapsed:.3f}s "
+            f"({result['tok_s']} tok/s, decode {result['decode_tok_s']} "
+            f"tok/s, util {util:.0%})")
+        return result

@@ -1,0 +1,61 @@
+"""On-device sampling head for the serving engine.
+
+Every knob is a *per-slot* array, so one fused decode tick serves a mixed
+population of requests (greedy next to nucleus next to top-k) without
+recompiling.  Determinism contract: the token sampled for request ``r`` at
+generation index ``t`` depends only on ``(r.seed, t)`` and the logits row —
+never on which slot the request landed in or who its cache neighbors are.
+That is what makes continuous-batching output reproducible against a solo
+run of the same request in an identically-shaped pool (the engine
+invariant suite asserts it).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def request_key(seed: int) -> jax.Array:
+    """The per-request PRNG base key (uint32[2], vmap/scatter friendly)."""
+    return jax.random.PRNGKey(seed)
+
+
+def token_key(base_key: jax.Array, t) -> jax.Array:
+    """Key for generation index ``t`` of a request (0 = the prefill token)."""
+    return jax.random.fold_in(base_key, t)
+
+
+def sample_tokens(logits: jax.Array, keys: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Sample one token per row. All sampling params are per-row arrays.
+
+    ``logits`` [B, V] (any float dtype; promoted to f32), ``keys`` [B, 2]
+    uint32 per-row PRNG keys, ``temperature`` [B] (``<= 0`` means greedy
+    argmax, matching the legacy serve path exactly), ``top_k`` [B]
+    (``<= 0`` disables), ``top_p`` [B] in ``(0, 1]`` (``1`` disables).
+    Filters compose the standard way: temperature scale -> top-k -> top-p
+    renormalized nucleus -> Gumbel-max draw.
+    """
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    # top-k: keep rows' k largest entries (threshold at the k-th value)
+    sorted_desc = -jnp.sort(-scaled, axis=-1)
+    k = jnp.where(top_k > 0, top_k, V)
+    kth = jnp.take_along_axis(
+        sorted_desc, jnp.clip(k - 1, 0, V - 1)[:, None], axis=-1)
+    masked = jnp.where(scaled < kth, -jnp.inf, scaled)
+    # top-p: smallest prefix of the sorted distribution with mass >= p
+    probs = jax.nn.softmax(masked, axis=-1)
+    probs_desc = -jnp.sort(-probs, axis=-1)
+    csum = jnp.cumsum(probs_desc, axis=-1)
+    include = (csum - probs_desc) < top_p[:, None]   # always keeps the head
+    thr = jnp.min(jnp.where(include, probs_desc, jnp.inf), axis=-1,
+                  keepdims=True)
+    masked = jnp.where(probs < thr, -jnp.inf, masked)
+
+    gumbel = jax.vmap(lambda kk: jax.random.gumbel(kk, (V,)))(keys)
+    sampled = jnp.argmax(masked + gumbel, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy_tok, sampled)

@@ -80,6 +80,51 @@ def latest_checkpoint(ckpt_dir: str) -> Optional[Tuple[int, str]]:
     return best
 
 
+def _restore_npz_tree(tree_like, path: str, subtree: str = ""):
+    """Rebuild ``tree_like`` from a legacy npz.  ``subtree`` names a key
+    prefix (e.g. ``params``) used when the checkpoint has it — a
+    full-TrainState save — and ignored for bare saves of the subtree
+    itself.  The one npz-restore implementation behind both
+    :func:`restore_checkpoint` and :func:`restore_params`."""
+    flat = _format.flatten_with_paths(tree_like)
+    treedef = jax.tree_util.tree_structure(tree_like)
+    restored = []
+    with np.load(path) as data:
+        prefix = subtree if subtree and any(
+            k.startswith(subtree + "/") for k in data.files) else ""
+        for k, like in flat:
+            key = f"{prefix}/{k}" if prefix else k
+            if key not in data:
+                raise _elastic.RestoreError(
+                    f"{path}: no leaf {key!r} (checkpoint holds "
+                    f"{len(data.files)} leaves, "
+                    f"e.g. {sorted(data.files)[:4]})")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(like.shape):
+                raise _elastic.RestoreError(
+                    f"{key}: checkpoint shape {tuple(arr.shape)} vs state "
+                    f"shape {tuple(like.shape)}"
+                )
+            arr = _elastic.cast_leaf(arr, like.dtype, key=key)
+            restored.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+def restore_params(params_like, path: str):
+    """Params-only restore from a TRAINING checkpoint (either format).
+
+    Training checkpoints hold the full ``{params, opt, step}`` TrainState;
+    serving needs just the ``params`` subtree.  ``params_like`` may be a
+    ``jax.eval_shape`` pytree (no allocation needed for the target).  Bare
+    params-only checkpoints (no ``params/`` key prefix) restore too.
+    """
+    if os.path.isdir(path):
+        keys = _elastic.manifest_keys(path)
+        prefix = "params" if any(k.startswith("params/") for k in keys) else ""
+        return _elastic.restore(params_like, path, prefix=prefix)
+    return _restore_npz_tree(params_like, path, subtree="params")
+
+
 def restore_checkpoint(state_like, path: str):
     """Restore into the structure of ``state_like`` (shapes must match).
 
@@ -88,17 +133,4 @@ def restore_checkpoint(state_like, path: str):
     """
     if os.path.isdir(path):
         return _elastic.restore(state_like, path)
-    data = np.load(path)
-    flat_keys = _flatten(state_like)
-    leaves, treedef = jax.tree_util.tree_flatten(state_like)
-    keys = list(flat_keys.keys())
-    assert len(keys) == len(leaves)
-    restored = []
-    for k, like in zip(keys, leaves):
-        arr = data[k]
-        assert tuple(arr.shape) == tuple(like.shape), (
-            f"{k}: checkpoint {arr.shape} vs state {like.shape}"
-        )
-        arr = _elastic.cast_leaf(arr, like.dtype, key=k)
-        restored.append(jax.numpy.asarray(arr))
-    return jax.tree_util.tree_unflatten(treedef, restored)
+    return _restore_npz_tree(state_like, path)

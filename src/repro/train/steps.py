@@ -127,3 +127,66 @@ def make_serve_step(model, mesh_ctx=None):
         return next_tok, logits, new_cache
 
     return serve_step
+
+
+def make_engine_step(model, mesh_ctx: Optional[B.MeshContext] = None,
+                     greedy: bool = False):
+    """The continuous-batching decode tick (``repro.serve`` engine hot path).
+
+    One fused step over the whole slot pool: decode every slot at its own
+    position, run the on-device sampling head (greedy / temperature / top-k /
+    top-p, seeded per request), and update the per-slot stop flags — a single
+    jitted call with the cache and slot state donated, so steady-state decode
+    never reallocates.
+
+    ``slots`` is a dict of per-slot arrays (``n_slots`` leading dim):
+
+    - ``tokens`` i32: last sampled token (fed to this tick's decode)
+    - ``pos`` i32: absolute position ``tokens`` is written/attended at
+    - ``active`` bool: slot holds a live request
+    - ``n_gen`` i32: tokens generated so far (the prefill token counts)
+    - ``max_gen`` i32: per-request generation budget
+    - ``eos`` i32: per-request stop token (-1 disables)
+    - ``key`` u32[2]: per-request PRNG base key (token t uses fold_in(key, t))
+    - ``temperature``/``top_k``/``top_p``: sampling knobs per slot
+
+    Returns ``(new_cache, new_slots, sampled, finished)``; inactive slots
+    keep their token/position frozen and their sampled entry is garbage the
+    scheduler never reads.
+
+    ``greedy=True`` compiles a sampler-free tick (plain argmax — what
+    ``sample_tokens`` returns for ``temperature <= 0``, minus the
+    full-vocab sort/softmax/cumsum/Gumbel work XLA cannot dead-code away
+    when temperature is a runtime array).  The variant is static per
+    engine: a greedy tick and the general tick are different fused
+    programs, so mixing them within one determinism comparison would
+    reintroduce batch-shape-style low-bit drift.
+    """
+    from ..serve.sampling import sample_tokens
+
+    def engine_step(params, cache, slots):
+        logits, new_cache = model.decode_step(params, cache, slots["tokens"],
+                                              slots["pos"], mesh_ctx)
+        if greedy:
+            sampled = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            step_keys = jax.vmap(jax.random.fold_in)(slots["key"],
+                                                     slots["n_gen"])
+            sampled = sample_tokens(logits, step_keys, slots["temperature"],
+                                    slots["top_k"], slots["top_p"])
+        active = slots["active"]
+        live = active.astype(jnp.int32)
+        sampled = jnp.where(active, sampled, slots["tokens"])
+        n_gen = slots["n_gen"] + live
+        finished = active & ((sampled == slots["eos"])
+                             | (n_gen >= slots["max_gen"]))
+        new_slots = dict(
+            slots,
+            tokens=sampled,
+            pos=slots["pos"] + live,
+            n_gen=n_gen,
+            active=active & ~finished,
+        )
+        return new_cache, new_slots, sampled, finished
+
+    return engine_step
