@@ -54,8 +54,11 @@ def serve_benchmark(model, *, batch: int = 4, prompt_len: int = 32,
                                  cfg.vocab)
     if cfg.arch_type == "audio" or cfg.n_patches:
         return _multimodal_benchmark(model, params, prompts, G, log)
+    # block_len=0 pins the dense slot pool: this shim's contract is bitwise
+    # identity with the pre-engine host loop, and the paged chunk-prefill
+    # program is a different fused computation
     engine = ServeEngine(model, params, n_slots=B, max_len=P + G,
-                         mesh=mesh, plan=plan, greedy=True)
+                         mesh=mesh, plan=plan, greedy=True, block_len=0)
     trace = static_trace(jax.device_get(prompts), G, seed=seed)
     out = engine.run(trace, realtime=False)
 

@@ -369,6 +369,182 @@ def mla_init_cache(cfg: B.ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat
     }
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache (serving): [n_blocks, block_len, ...] leaves + page tables
+# ---------------------------------------------------------------------------
+# The serve engine's block allocator hands each request a row of physical
+# block ids; attention reads the cache *through* that row (gather) and
+# writes the current token's K/V into (block, offset) = (row[pos // bl],
+# pos % bl) (scatter).  Two JAX indexing facts are load-bearing here:
+#
+# - gathers CLAMP out-of-bounds indices and WRAP negative ones, so a page
+#   table's -1 (unallocated) entries resolve to real-but-wrong pages whose
+#   values are finite garbage — always behind the causal/validity mask, so
+#   softmax gives them exactly-0 probability and they never reach the output;
+# - scatters DROP positive out-of-bounds indices, so suppressed writes
+#   (inactive slots, padding rows of a prefill chunk) use the sentinel
+#   ``n_blocks``.  -1 would WRAP and corrupt the last live block.
+
+
+def paged_view(leaf, pages):
+    """Gather ``leaf [n_blocks, bl, ...]`` through ``pages [..., n_pages]``
+    into a contiguous view ``[..., n_pages * bl, ...]``."""
+    v = leaf[pages]
+    lead = pages.shape[:-1]
+    return v.reshape(lead + (pages.shape[-1] * leaf.shape[1],)
+                     + leaf.shape[2:])
+
+
+def _paged_write(leaf, phys, off, vals):
+    """Scatter ``vals [N, ...]`` rows into ``leaf[phys[i], off[i]]``
+    (``phys == n_blocks`` drops the write)."""
+    return leaf.at[phys, off].set(vals.astype(leaf.dtype))
+
+
+def gqa_init_paged_cache(cfg: B.ArchConfig, n_blocks: int, block_len: int,
+                         dtype=jnp.bfloat16):
+    K, dh = cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "k": jnp.zeros((n_blocks, block_len, K, dh), dtype),
+        "v": jnp.zeros((n_blocks, block_len, K, dh), dtype),
+    }
+
+
+def gqa_decode_paged(cfg: B.ArchConfig, p, cache, x, positions, pages,
+                     active=None):
+    """Single-token GQA decode through page tables.
+
+    x [B,1,D]; positions [B]; pages int32 [B, n_pages] physical block ids
+    per slot; active bool [B] suppresses cache writes for dead slots (their
+    frozen positions may alias pages since freed and reused)."""
+    q, k, v = _project_qkv(p, x, cfg)
+    q = apply_rope(q, positions[:, None], cfg.rope_theta)
+    k = apply_rope(k, positions[:, None], cfg.rope_theta)
+    nb, bl = cache["k"].shape[:2]
+    phys = jnp.take_along_axis(pages, (positions // bl)[:, None], axis=1)[:, 0]
+    if active is not None:
+        phys = jnp.where(active, phys, nb)
+    ck = _paged_write(cache["k"], phys, positions % bl, k[:, 0])
+    cv = _paged_write(cache["v"], phys, positions % bl, v[:, 0])
+    vk = paged_view(ck, pages)                                   # [B,T,K,dh]
+    vv = paged_view(cv, pages)
+    dh = q.shape[-1]
+    scores = _gqa_scores_einsum(q, vk).astype(jnp.float32) / math.sqrt(dh)
+    T = vk.shape[1]
+    valid = jnp.arange(T)[None, :] < (positions + 1)[:, None]    # [B,T]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = _gqa_out_einsum(probs, vv)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, {"k": ck, "v": cv}
+
+
+def gqa_prefill_chunk(cfg: B.ArchConfig, p, cache, x, positions, pages_row,
+                      n_valid):
+    """One fixed-shape prefill chunk: C prompt rows into one request's pages.
+
+    x [1,C,D]; positions [C] absolute; pages_row int32 [n_pages]; rows at
+    index >= n_valid are padding (writes dropped, outputs garbage).  The
+    chunk shape never depends on the prompt length, so a page's stored K/V
+    is bitwise identical whether the prompt was short or long, cold or a
+    cache hit — the canonical-page property the radix index shares under.
+    """
+    q, k, v = _project_qkv(p, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    nb, bl = cache["k"].shape[:2]
+    row_idx = jnp.arange(positions.shape[0])
+    phys = jnp.where(row_idx < n_valid, pages_row[positions // bl], nb)
+    ck = _paged_write(cache["k"], phys, positions % bl, k[0])
+    cv = _paged_write(cache["v"], phys, positions % bl, v[0])
+    vk = paged_view(ck, pages_row[None])                        # [1,T,K,dh]
+    vv = paged_view(cv, pages_row[None])
+    dh = q.shape[-1]
+    scores = _gqa_scores_einsum(q, vk).astype(jnp.float32) / math.sqrt(dh)
+    T = vk.shape[1]
+    valid = positions[:, None] >= jnp.arange(T)[None, :]         # [C,T] causal
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = _gqa_out_einsum(probs, vv)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, {"k": ck, "v": cv}
+
+
+def mla_init_paged_cache(cfg: B.ArchConfig, n_blocks: int, block_len: int,
+                         dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((n_blocks, block_len, m.kv_lora), dtype),
+        "k_rope": jnp.zeros((n_blocks, block_len, m.head_dim_rope), dtype),
+    }
+
+
+def mla_decode_paged(cfg: B.ArchConfig, p, cache, x, positions, pages,
+                     active=None, absorb: bool = False):
+    """Single-token MLA decode against the paged latent cache."""
+    m = cfg.mla
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, positions[:, None])
+    nb, bl = cache["c_kv"].shape[:2]
+    phys = jnp.take_along_axis(pages, (positions // bl)[:, None], axis=1)[:, 0]
+    if active is not None:
+        phys = jnp.where(active, phys, nb)
+    cc = _paged_write(cache["c_kv"], phys, positions % bl, c_kv[:, 0])
+    cr = _paged_write(cache["k_rope"], phys, positions % bl, k_rope[:, 0])
+    vc = paged_view(cc, pages)                                   # [B,T,r]
+    vr = paged_view(cr, pages)
+    scale = 1.0 / math.sqrt(m.head_dim_nope + m.head_dim_rope)
+    T = vc.shape[1]
+    valid = jnp.arange(T)[None, :] <= positions[:, None]
+
+    if absorb:
+        wkb = p["wkv_b"].astype(x.dtype)
+        wk, wv = jnp.split(wkb, [m.head_dim_nope], axis=-1)
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wk)
+        s = jnp.einsum("bshr,btr->bhst", q_lat, vc)
+        s = s + jnp.einsum("bshk,btk->bhst", q_rope, vr)
+        s = s.astype(jnp.float32) * scale
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o_lat = jnp.einsum("bhst,btr->bshr", probs, vc)
+        o = jnp.einsum("bshr,rhk->bshk", o_lat, wv)
+    else:
+        k_nope, v = _mla_expand_kv(cfg, p, vc.astype(x.dtype))
+        s = jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+        s = s + jnp.einsum("bshk,btk->bhst", q_rope, vr.astype(x.dtype))
+        s = s.astype(jnp.float32) * scale
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhst,bthk->bshk", probs, v)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, {"c_kv": cc, "k_rope": cr}
+
+
+def mla_prefill_chunk(cfg: B.ArchConfig, p, cache, x, positions, pages_row,
+                      n_valid):
+    """One fixed-shape MLA prefill chunk (see ``gqa_prefill_chunk``)."""
+    m = cfg.mla
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, positions)
+    nb, bl = cache["c_kv"].shape[:2]
+    row_idx = jnp.arange(positions.shape[0])
+    phys = jnp.where(row_idx < n_valid, pages_row[positions // bl], nb)
+    cc = _paged_write(cache["c_kv"], phys, positions % bl, c_kv[0])
+    cr = _paged_write(cache["k_rope"], phys, positions % bl, k_rope[0])
+    vc = paged_view(cc, pages_row[None])                         # [1,T,r]
+    vr = paged_view(cr, pages_row[None])
+    scale = 1.0 / math.sqrt(m.head_dim_nope + m.head_dim_rope)
+    T = vc.shape[1]
+    k_nope, v = _mla_expand_kv(cfg, p, vc.astype(x.dtype))
+    s = jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+    s = s + jnp.einsum("bshk,btk->bhst", q_rope, vr.astype(x.dtype))
+    s = s.astype(jnp.float32) * scale
+    valid = positions[:, None] >= jnp.arange(T)[None, :]         # [C,T]
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhst,bthk->bshk", probs, v)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, {"c_kv": cc, "k_rope": cr}
+
+
 def mla_decode(cfg: B.ArchConfig, p, cache, x, positions, absorb: bool = False):
     """Single-token MLA decode against the latent cache."""
     m = cfg.mla

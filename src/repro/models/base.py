@@ -216,8 +216,22 @@ class Model(abc.ABC):
         tokens: jax.Array,          # [B] current tokens
         positions: jax.Array,       # [B] absolute positions
         mesh_ctx: Optional[MeshContext] = None,
+        pages: Optional[jax.Array] = None,   # [B, n_pages] paged-cache tables
+        active: Optional[jax.Array] = None,  # [B] write gate (paged only)
     ) -> Tuple[jax.Array, Any]:
         raise NotImplementedError(f"{self.cfg.name}: no decode path")
+
+    def supports_paged_cache(self) -> bool:
+        """Whether ``init_paged_cache``/``prefill_chunk`` and the paged
+        ``decode_step`` are implemented for this architecture."""
+        return False
+
+    def init_paged_cache(self, n_blocks: int, block_len: int,
+                         dtype=jnp.bfloat16) -> Any:
+        """Block-pool decode cache: every leaf ``[L, n_blocks, block_len,
+        ...]``; requests map blocks via per-slot page tables (see
+        ``repro.serve.paging``) instead of owning a dense slot row."""
+        raise NotImplementedError(f"{self.cfg.name}: no paged decode path")
 
     def insert_cache(self, cache: Any, request_cache: Any, slot) -> Any:
         """Write a batch=1 request cache into one slot of a slot-pool cache.

@@ -129,6 +129,45 @@ def decode_block(cfg, kind, p, cache, x, positions, mesh_ctx=None,
     return x + h, new_cache, jnp.zeros((), jnp.float32)
 
 
+def decode_block_paged(cfg, kind, p, cache, x, positions, pages, active,
+                       mesh_ctx=None, storage_axes=()):
+    """``decode_block`` reading/writing K/V through page tables."""
+    h = apply_norm(cfg, p["attn_norm"], x)
+    if cfg.mla:
+        h, new_cache = A.mla_decode_paged(cfg, p["attn"], cache, h, positions,
+                                          pages, active, absorb=cfg.mla_absorb)
+    else:
+        h, new_cache = A.gqa_decode_paged(cfg, p["attn"], cache, h, positions,
+                                          pages, active)
+    x = x + h
+    h = apply_norm(cfg, p["mlp_norm"], x)
+    if kind == "moe_block":
+        h, _ = MOE.moe_forward(cfg, p["moe"], h, mesh_ctx, storage_axes)
+    else:
+        h = M.mlp_forward(cfg, p["mlp"], h)
+    return x + h, new_cache
+
+
+def prefill_chunk_block(cfg, kind, p, cache, x, positions, pages_row, n_valid,
+                        mesh_ctx=None, storage_axes=()):
+    """One layer of the fixed-shape chunked-prefill program."""
+    x = B.constrain(x, mesh_ctx)
+    h = apply_norm(cfg, p["attn_norm"], x)
+    if cfg.mla:
+        h, new_cache = A.mla_prefill_chunk(cfg, p["attn"], cache, h, positions,
+                                           pages_row, n_valid)
+    else:
+        h, new_cache = A.gqa_prefill_chunk(cfg, p["attn"], cache, h, positions,
+                                           pages_row, n_valid)
+    x = x + h
+    h = apply_norm(cfg, p["mlp_norm"], x)
+    if kind == "moe_block":
+        h, _ = MOE.moe_forward(cfg, p["moe"], h, mesh_ctx, storage_axes)
+    else:
+        h = M.mlp_forward(cfg, p["mlp"], h)
+    return B.constrain(x + h, mesh_ctx), new_cache
+
+
 def _pad_cache_seq(k, max_len, window):
     """k [B,S,...] -> cache layout [B,L,...] (ring-packed when windowed)."""
     S = k.shape[1]
@@ -462,11 +501,81 @@ class DecoderLM(B.Model):
             )
         return cache
 
-    def decode_step(self, params, cache, tokens, positions, mesh_ctx=None):
+    def supports_paged_cache(self) -> bool:
+        """Paged serving needs every decode layer to be full-context
+        attention over an append-only KV stream: sliding windows re-use
+        ring positions (a page would need rewriting after sharing) and SSM
+        state is a dense recurrence with no token axis to page."""
+        cfg = self.cfg
+        return (cfg.arch_type in ("dense", "moe") and cfg.window == 0
+                and not cfg.n_patches)
+
+    def init_paged_cache(self, n_blocks, block_len, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if not self.supports_paged_cache():
+            raise NotImplementedError(
+                f"{cfg.name}: paged KV cache needs full-context attention "
+                f"layers (arch {cfg.arch_type}, window {cfg.window})")
+        cache: Dict[str, Any] = {}
+        for name, kind, idxs in self._stacks():
+            one = (A.mla_init_paged_cache if cfg.mla
+                   else A.gqa_init_paged_cache)(cfg, n_blocks, block_len,
+                                                dtype)
+            cache[name] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (len(idxs),) + a.shape), one
+            )
+        return cache
+
+    def prefill_chunk(self, params, cache, pages_row, tokens, start, n_valid,
+                      mesh_ctx=None, storage_axes=()):
+        """Run one fixed-shape prompt chunk into a request's pages.
+
+        ``tokens`` i32 [C] (entries past ``n_valid`` are padding, zeroed by
+        the caller), ``start`` the absolute position of ``tokens[0]``,
+        ``pages_row`` i32 [max_pages] this request's physical block ids.
+        Returns (logits of the last valid row [1, vocab], new cache) — the
+        logits only matter on the final chunk of an admission.
+        """
+        cfg = self.cfg
+        x = self.embed_tokens(params, tokens[None])
+        x = B.constrain(x, mesh_ctx)
+        positions = start + jnp.arange(tokens.shape[0])
+        new_cache: Dict[str, Any] = {}
+        for name, kind, idxs in self._stacks():
+
+            def body(x, inp, kind=kind):
+                lp, lc = inp
+                x, nc = prefill_chunk_block(cfg, kind, lp, lc, x, positions,
+                                            pages_row, n_valid, mesh_ctx,
+                                            storage_axes)
+                return x, nc
+
+            x, nc = ST.Stacked(body, len(idxs)).scan(
+                (params[name], cache[name]), x)
+            new_cache[name] = nc
+        last = jnp.take(x, n_valid - 1, axis=1)          # [1, D]
+        logits = self.logits(params, last[:, None], mesh_ctx)[:, 0]
+        return logits, new_cache
+
+    def decode_step(self, params, cache, tokens, positions, mesh_ctx=None,
+                    pages=None, active=None):
         cfg = self.cfg
         x = self.embed_tokens(params, tokens[:, None])
         new_cache: Dict[str, Any] = {}
-        if cfg.arch_type == "hybrid":
+        if pages is not None:
+            for name, kind, idxs in self._stacks():
+
+                def pbody(x, inp, kind=kind):
+                    lp, lc = inp
+                    x, nc = decode_block_paged(cfg, kind, lp, lc, x,
+                                               positions, pages, active,
+                                               mesh_ctx)
+                    return x, nc
+
+                x, nc = ST.Stacked(pbody, len(idxs)).scan(
+                    (params[name], cache[name]), x)
+                new_cache[name] = nc
+        elif cfg.arch_type == "hybrid":
             x, new_cache = self._decode_hybrid(params, cache, x, positions)
         else:
             for name, kind, idxs in self._stacks():

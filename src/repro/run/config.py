@@ -160,10 +160,18 @@ class WorkloadSettings:
     gen_tokens: Any = (8, 16)
     seed: int = 0
     realtime: bool = True
+    prefix_len: int = 0           # > 0 => shared-prefix trace (tails drawn
+    n_prefixes: int = 1           #        from prompt_lens)
 
     def __post_init__(self):
         if self.n_requests < 1:
             raise RunError("run.serve.workload.n_requests must be >= 1")
+        if self.prefix_len < 0:
+            raise RunError(f"run.serve.workload.prefix_len must be >= 0, "
+                           f"got {self.prefix_len}")
+        if self.n_prefixes < 1:
+            raise RunError(f"run.serve.workload.n_prefixes must be >= 1, "
+                           f"got {self.n_prefixes}")
         for field in ("prompt_lens", "gen_tokens"):
             val = getattr(self, field)
             if isinstance(val, int):
@@ -218,6 +226,10 @@ class ServeSettings:
     n_slots: int = 4
     max_len: int = 0              # 0 => derived from the workload/static shape
     eos_id: int = -1              # -1 => requests only stop on budget
+    block_len: int = -1           # paged KV page size; -1 auto, 0 dense pool
+    n_blocks: int = 0             # 0 => (n_slots + 1) * pages-per-request
+    prefill_chunk: int = 0        # 0 => 2 * block_len (must divide by it)
+    prefix_cache: bool = True     # radix prefix sharing (paged mode only)
     sampling: Any = None          # mapping -> SamplingSettings
     workload: Any = None          # mapping -> WorkloadSettings
     compare_static: bool = True
@@ -231,6 +243,12 @@ class ServeSettings:
         if self.engine and self.n_slots < 1:
             raise RunError(f"run.serve.n_slots must be >= 1, "
                            f"got {self.n_slots}")
+        if self.block_len < -1:
+            raise RunError(f"run.serve.block_len must be -1 (auto), 0 "
+                           f"(dense), or a page size, got {self.block_len}")
+        if self.n_blocks < 0 or self.prefill_chunk < 0:
+            raise RunError(f"run.serve.n_blocks/prefill_chunk must be >= 0, "
+                           f"got {self.n_blocks}/{self.prefill_chunk}")
 
 
 @dataclasses.dataclass

@@ -338,24 +338,38 @@ def execute_serve(ctx) -> Dict[str, Any]:
 
     # -- continuous-batching engine path ------------------------------------
     from ..serve.engine import ServeEngine, load_params
-    from ..serve.workload import synthetic_trace, trace_summary
+    from ..serve.workload import (shared_prefix_trace, synthetic_trace,
+                                  trace_summary)
 
     w, samp = s.workload, s.sampling
-    max_len = s.max_len or (max(w.prompt_lens) + max(w.gen_tokens))
+    longest_prompt = w.prefix_len + max(w.prompt_lens)   # tails when prefixed
+    max_len = s.max_len or (longest_prompt + max(w.gen_tokens))
     params = load_params(model, ckpt=s.ckpt, seed=s.seed)
     engine = ServeEngine(model, params, n_slots=s.n_slots, max_len=max_len,
                          mesh=mesh, plan=plan,
-                         greedy=samp.temperature <= 0, log=ctx.log)
-    trace = synthetic_trace(
-        w.n_requests, model.cfg.vocab, seed=w.seed, rate=w.rate,
-        prompt_lens=w.prompt_lens, gen_tokens=w.gen_tokens,
-        temperature=samp.temperature, top_k=samp.top_k, top_p=samp.top_p,
-        eos_id=s.eos_id, max_len=max_len)
+                         greedy=samp.temperature <= 0,
+                         block_len=None if s.block_len < 0 else s.block_len,
+                         n_blocks=s.n_blocks, prefill_chunk=s.prefill_chunk,
+                         prefix_cache=s.prefix_cache, log=ctx.log)
+    if w.prefix_len:
+        trace = shared_prefix_trace(
+            w.n_requests, model.cfg.vocab, prefix_len=w.prefix_len,
+            n_prefixes=w.n_prefixes, seed=w.seed, rate=w.rate,
+            prompt_lens=w.prompt_lens, gen_tokens=w.gen_tokens,
+            temperature=samp.temperature, top_k=samp.top_k, top_p=samp.top_p,
+            eos_id=s.eos_id, max_len=max_len)
+    else:
+        trace = synthetic_trace(
+            w.n_requests, model.cfg.vocab, seed=w.seed, rate=w.rate,
+            prompt_lens=w.prompt_lens, gen_tokens=w.gen_tokens,
+            temperature=samp.temperature, top_k=samp.top_k, top_p=samp.top_p,
+            eos_id=s.eos_id, max_len=max_len)
     ts = trace_summary(trace)
     ctx.log(f"serve engine: {ts['n_requests']} requests "
             f"({ts['prompt_tokens']} prompt tokens, gen budget "
             f"{ts['gen_budget']}, span {ts['span_s']:.2f}s) over "
-            f"{s.n_slots} slots (max_len {max_len})")
+            f"{s.n_slots} slots (max_len {max_len}, "
+            f"{'paged' if engine.paged else 'dense'} cache)")
     result: Dict[str, Any] = engine.run(trace, realtime=w.realtime)
     result["arch"] = model.cfg.name
     if plan is not None:
@@ -366,7 +380,7 @@ def execute_serve(ctx) -> Dict[str, Any]:
         # batching must not decode slower than a lockstep batch of the same
         # width and layout
         shim = serve_benchmark(model, batch=s.n_slots,
-                               prompt_len=max(w.prompt_lens),
+                               prompt_len=longest_prompt,
                                gen=max(w.gen_tokens), seed=s.seed,
                                params=params, mesh=mesh, plan=plan,
                                log=ctx.log)

@@ -1,16 +1,24 @@
 """Continuous-batching inference (the fifth pillar: sweep, run API,
 hot path, elastic ckpt — and now serve).
 
-- :mod:`repro.serve.engine` — slot-pool scheduler + fused decode tick
+- :mod:`repro.serve.engine` — paged/dense scheduler + fused decode tick
+- :mod:`repro.serve.paging` — block allocator + radix prefix index
 - :mod:`repro.serve.sampling` — on-device per-slot sampling head
 - :mod:`repro.serve.workload` — seeded synthetic traces + latency metrics
+
+``docs/serving.md`` is the subsystem deep-dive (allocator layout, radix
+lifecycle, chunked prefill, the determinism contract, metrics glossary).
 """
 from .engine import EngineError, ServeEngine, load_params
+from .paging import BlockAllocator, OutOfBlocks, RadixPrefixIndex
 from .sampling import request_key, sample_tokens, token_key
-from .workload import Request, percentiles, static_trace, synthetic_trace
+from .workload import (Request, percentiles, shared_prefix_trace,
+                       static_trace, synthetic_trace)
 
 __all__ = [
     "EngineError", "ServeEngine", "load_params",
+    "BlockAllocator", "OutOfBlocks", "RadixPrefixIndex",
     "request_key", "sample_tokens", "token_key",
-    "Request", "percentiles", "static_trace", "synthetic_trace",
+    "Request", "percentiles", "shared_prefix_trace", "static_trace",
+    "synthetic_trace",
 ]

@@ -1,23 +1,37 @@
 """Continuous-batching serving engine (the fifth pillar).
 
-A fixed slot-pool cache (``model.init_cache(n_slots, max_len)``, allocated
-once per run) plus a host-side scheduler: queued requests are admitted into
-free slots *mid-flight* (prefill writes straight into the slot row via
-``model.prefill_into``), every tick decodes all slots in one fused jitted
-step (``train.steps.make_engine_step``: decode + on-device sampling head +
-stop flags, cache and slot state donated), and slots retire on EOS or
-budget — immediately freeing the row for the next queued request.
+Two cache layouts share one scheduler:
 
-Determinism contract: at a fixed pool shape ``(n_slots, max_len)``, a
-request's token stream depends only on its own prompt, sampling settings,
-and seed — never on slot index, admission order, or co-resident requests.
-(Fixed shape matters: XLA may fuse the tick differently per batch width,
-and the resulting 1-ulp reassociation differences can flip a sampling
-near-tie.)  ``tests/test_serve_engine.py`` asserts engine == solo across
-the GQA ring-buffer, MLA, and hybrid SSD cache families.
+- **Paged** (the default when the arch supports it): the KV cache is a
+  block pool (``model.init_paged_cache(n_blocks, block_len)``, every leaf
+  ``[L, n_blocks, block_len, ...]``) and each slot owns a page-table row of
+  physical block ids.  A radix prefix index (:mod:`repro.serve.paging`)
+  maps shared prompt prefixes onto refcounted pages, so a request whose
+  prompt extends a cached stream only prefills its tail — and admission is
+  *chunked*: fixed-shape prompt chunks interleave with decode ticks, so a
+  long prefill can never stall in-flight decodes for more than one chunk.
+- **Dense** slot rows (``model.init_cache(n_slots, max_len)``) for archs a
+  block pool cannot express — sliding-window ring buffers, SSM state,
+  hybrids — and for ``block_len=0`` (the static shim pins this for bitwise
+  compatibility with the pre-paging engine).
+
+Every tick decodes all slots in one fused jitted step
+(``train.steps.make_engine_step``: decode + on-device sampling head + stop
+flags, cache and slot state donated); slots retire on EOS or budget,
+immediately releasing their pages (prefix pages stay cached in the radix
+tree until LRU eviction needs the space).
+
+Determinism contract: at a fixed pool shape, a request's token stream
+depends only on its own prompt, sampling settings, and seed — never on
+slot index, admission order, co-resident requests, or (paged) whether its
+prefix came from the radix cache or a cold prefill.  The cache-hit half
+holds because pages are written by a fixed-shape chunk program whose
+values cannot depend on prompt length or chunk grouping, and only
+chunk-written prompt pages are ever shared.  ``docs/serving.md`` spells
+out the full argument; ``tests/test_serve_paging.py`` enforces it.
 
 Sharded serving reuses :mod:`repro.sharding.plans`: params laid out under
-the plan, the cache's slot axis data-sharded (``plans.cache_shardings``).
+the plan, the cache's slot/block axis data-sharded (``cache_shardings``).
 """
 from __future__ import annotations
 
@@ -27,11 +41,15 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..sharding import plans as PL
 from ..train import steps as ST
+from .paging import BlockAllocator, RadixPrefixIndex
 from .sampling import request_key, sample_tokens
 from .workload import Request, percentiles
+
+DEFAULT_BLOCK_LEN = 16
 
 
 class EngineError(Exception):
@@ -55,17 +73,33 @@ def load_params(model, ckpt: str = "", seed: int = 0):
 
 
 class ServeEngine:
-    """Slot-pool continuous-batching engine over one resolved model."""
+    """Continuous-batching engine over one resolved model."""
 
     def __init__(self, model, params, *, n_slots: int, max_len: int,
                  cache_dtype=jnp.bfloat16, mesh=None, plan=None,
-                 greedy: bool = False,
+                 greedy: bool = False, block_len: Optional[int] = None,
+                 n_blocks: int = 0, prefill_chunk: int = 0,
+                 prefix_cache: bool = True,
                  log: Optional[Callable[[str], None]] = None):
         """``greedy=True`` compiles a sampler-free decode tick — use it when
         EVERY request this engine will serve is greedy (the static shim, or
         an all-greedy workload); the engine rejects sampled requests then.
         The variant is fixed per engine because greedy and general ticks
-        are different fused programs (see ``make_engine_step``)."""
+        are different fused programs (see ``make_engine_step``).
+
+        ``block_len=None`` (default) auto-selects: paged KV cache with
+        ``DEFAULT_BLOCK_LEN``-token pages when the arch supports it, the
+        dense slot pool otherwise.  ``block_len=0`` forces dense;
+        ``block_len>0`` forces paged (raising for unsupported archs).
+        ``n_blocks=0`` sizes the pool to ``(n_slots + 1) * max_pages`` —
+        full residency plus one request's worth of retained prefix pages.
+        ``prefill_chunk`` (default ``2 * block_len``) is the fixed chunk
+        the admission prefill is split into — the TTFT budget a prefill
+        may stall co-resident decodes, and the grid cached pages are
+        canonical on (must be a multiple of ``block_len``).
+        ``prefix_cache=False`` keeps the block pool but disables radix
+        matching/insertion (every admission prefills cold).
+        """
         cfg = model.cfg
         if cfg.arch_type == "audio" or cfg.n_patches:
             raise EngineError(
@@ -81,6 +115,38 @@ class ServeEngine:
         self.cache_dtype = cache_dtype
         self.log = log or (lambda msg: None)
         self.mesh, self.plan = mesh, plan
+        supports_paged = model.supports_paged_cache()
+        if block_len is None:
+            self.block_len = DEFAULT_BLOCK_LEN if supports_paged else 0
+        else:
+            self.block_len = int(block_len)
+            if self.block_len > 0 and not supports_paged:
+                raise EngineError(
+                    f"{cfg.name}: paged KV cache needs full-context "
+                    f"attention decode layers (arch {cfg.arch_type}, window "
+                    f"{cfg.window}); set block_len: 0 for the dense pool")
+        self.paged = self.block_len > 0
+        if self.paged:
+            self.block_len = min(self.block_len, self.max_len)
+            self.max_pages = -(-self.max_len // self.block_len)
+            self.n_blocks = int(n_blocks) or (self.n_slots + 1) * self.max_pages
+            if self.n_blocks < self.max_pages:
+                raise EngineError(
+                    f"n_blocks {self.n_blocks} cannot hold one max_len "
+                    f"request ({self.max_pages} pages of {self.block_len})")
+            chunk = int(prefill_chunk) or 2 * self.block_len
+            if chunk < 1 or chunk % self.block_len:
+                raise EngineError(
+                    f"prefill_chunk {chunk} must be a positive multiple of "
+                    f"block_len {self.block_len}: the chunk grid is what "
+                    f"makes cached pages bitwise canonical")
+            self.prefill_chunk = min(chunk, self.max_pages * self.block_len)
+            self.prefix_cache = bool(prefix_cache)
+        else:
+            self.max_pages = 0
+            self.n_blocks = 0
+            self.prefill_chunk = 0
+            self.prefix_cache = False
         if mesh is not None and plan is not None:
             self.mesh_ctx = PL.mesh_context(plan, mesh)
             pshapes = jax.tree_util.tree_map(
@@ -94,19 +160,32 @@ class ServeEngine:
             self.params = params
         self.greedy = bool(greedy)
         self._tick = jax.jit(
-            ST.make_engine_step(model, self.mesh_ctx, greedy=self.greedy),
+            ST.make_engine_step(model, self.mesh_ctx, greedy=self.greedy,
+                                paged=self.paged),
             donate_argnums=(1, 2))
-        self._admits: Dict[int, Any] = {}   # prompt_len -> jitted admit
+        self._admits: Dict[int, Any] = {}   # dense: prompt_len -> admit fn
+        if self.paged:
+            self._chunk = jax.jit(
+                ST.make_prefill_chunk_step(model, self.mesh_ctx),
+                donate_argnums=(1,))
+            self._first = jax.jit(self._make_first_token())
+            self._set_slot = jax.jit(self._make_set_slot(),
+                                     donate_argnums=(0,))
 
     # -- device state ------------------------------------------------------
     def _init_pool(self):
-        cache = self.model.init_cache(self.n_slots, self.max_len,
-                                      self.cache_dtype)
+        if self.paged:
+            cache = self.model.init_paged_cache(self.n_blocks, self.block_len,
+                                                self.cache_dtype)
+        else:
+            cache = self.model.init_cache(self.n_slots, self.max_len,
+                                          self.cache_dtype)
         if self.mesh is not None and self.plan is not None:
             cshapes = jax.tree_util.tree_map(
                 lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), cache)
             csh = PL.cache_shardings(self.plan, self.mesh, cshapes,
-                                     self.n_slots)
+                                     self.n_blocks if self.paged
+                                     else self.n_slots)
             cache = jax.device_put(cache, csh)
         n = self.n_slots
         slots = {
@@ -123,8 +202,54 @@ class ServeEngine:
         }
         return cache, slots
 
+    def _reset_paging(self):
+        """Fresh allocator / radix tree / page table for one ``run``."""
+        self._alloc = BlockAllocator(self.n_blocks)
+        self._radix = RadixPrefixIndex(self.block_len, self._alloc)
+        self._pt = np.full((self.n_slots, self.max_pages), -1, np.int32)
+        self._pt_dev = None                  # lazily refreshed device copy
+        self._req_blocks: Dict[int, List[int]] = {}   # rid -> mapped blocks
+
+    def _pages_dev(self):
+        if self._pt_dev is None:
+            self._pt_dev = jnp.asarray(self._pt)
+        return self._pt_dev
+
+    # -- jitted helpers (paged admission) ----------------------------------
+    def _make_first_token(self):
+        """Sample generation index 0 from the final chunk's logits (the
+        same head the dense admit fuses into ``prefill_into``)."""
+        greedy = self.greedy
+
+        def first_token(logits, key, temperature, top_k, top_p):
+            if greedy:
+                return jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
+            k0 = jax.random.fold_in(key, 0)
+            return sample_tokens(logits, k0[None], temperature[None],
+                                 top_k[None], top_p[None])[0]
+
+        return first_token
+
+    def _make_set_slot(self):
+        def set_slot(slots, slot, tok, pos, active, max_gen, eos, key,
+                     temperature, top_k, top_p):
+            return {
+                "tokens": slots["tokens"].at[slot].set(tok),
+                "pos": slots["pos"].at[slot].set(pos),
+                "active": slots["active"].at[slot].set(active),
+                "n_gen": slots["n_gen"].at[slot].set(1),
+                "max_gen": slots["max_gen"].at[slot].set(max_gen),
+                "eos": slots["eos"].at[slot].set(eos),
+                "key": slots["key"].at[slot].set(key),
+                "temperature": slots["temperature"].at[slot].set(temperature),
+                "top_k": slots["top_k"].at[slot].set(top_k),
+                "top_p": slots["top_p"].at[slot].set(top_p),
+            }
+
+        return set_slot
+
     def _admit_fn(self, prompt_len: int):
-        """One compiled admission per prompt length (slot index is traced)."""
+        """Dense mode: one compiled admission per prompt length."""
         fn = self._admits.get(prompt_len)
         if fn is not None:
             return fn
@@ -174,19 +299,38 @@ class ServeEngine:
         return min(int(r.max_new), self.max_len - P)
 
     def _warmup(self, prompt_lens) -> float:
-        """Compile every jitted path a trace will hit (the tick + one admit
-        per distinct prompt length) against a sacrificial pool, so the
-        timed loop measures serving, not XLA.  Dispatch-cache hits make a
-        second run's warmup just a few fast real calls."""
+        """Compile every jitted path a trace will hit against a sacrificial
+        pool, so the timed loop measures serving, not XLA.  Paged mode
+        compiles a fixed set (chunk + first-token + slot-write + tick) no
+        matter how many distinct prompt lengths the trace has; dense mode
+        compiles one admit per length.  Dispatch-cache hits make a second
+        run's warmup just a few fast real calls."""
         t0 = time.perf_counter()
         cache, slots = self._init_pool()
-        for P in sorted(set(prompt_lens)):
-            admit = self._admit_fn(P)
-            cache, slots, _, _ = admit(
-                self.params, cache, slots, jnp.zeros((P,), jnp.int32),
-                jnp.int32(0), request_key(0), jnp.float32(0.0),
-                jnp.int32(0), jnp.float32(1.0), jnp.int32(1), jnp.int32(-1))
-        out = self._tick(self.params, cache, slots)
+        if self.paged:
+            row = jnp.zeros((self.max_pages,), jnp.int32)
+            logits, cache = self._chunk(
+                self.params, cache, row,
+                jnp.zeros((self.prefill_chunk,), jnp.int32),
+                jnp.int32(0), jnp.int32(1))
+            tok = self._first(logits, request_key(0), jnp.float32(0.0),
+                              jnp.int32(0), jnp.float32(1.0))
+            slots = self._set_slot(
+                slots, jnp.int32(0), tok, jnp.int32(1), jnp.asarray(True),
+                jnp.int32(1), jnp.int32(-1), request_key(0),
+                jnp.float32(0.0), jnp.int32(0), jnp.float32(1.0))
+            out = self._tick(self.params, cache, slots,
+                             jnp.zeros((self.n_slots, self.max_pages),
+                                       jnp.int32))
+        else:
+            for P in sorted(set(prompt_lens)):
+                admit = self._admit_fn(P)
+                cache, slots, _, _ = admit(
+                    self.params, cache, slots, jnp.zeros((P,), jnp.int32),
+                    jnp.int32(0), request_key(0), jnp.float32(0.0),
+                    jnp.int32(0), jnp.float32(1.0), jnp.int32(1),
+                    jnp.int32(-1))
+            out = self._tick(self.params, cache, slots)
         jax.block_until_ready(out)
         return time.perf_counter() - t0
 
@@ -197,19 +341,22 @@ class ServeEngine:
 
         ``realtime=False`` ignores arrival offsets (closed loop, maximum
         pressure — the bench mode).  Metrics: TTFT (arrival -> first token,
-        queueing included), per-decode-token latency percentiles, tokens/s,
-        and slot utilization.  The first token of every request is sampled
-        from the prefill logits and accounted to prefill/TTFT; only
-        subsequent tokens count as decode throughput.  ``warmup`` (default)
-        compiles every path against a sacrificial pool first, so compile
-        time lands in ``compile_s`` instead of polluting every latency and
-        throughput number (and the engine-vs-shim comparison).
+        queueing included; split hit/cold in paged mode), per-decode-token
+        latency percentiles, tokens/s, slot utilization, and — paged —
+        prefix-cache hit rate plus allocator/eviction counters.  The first
+        token of every request is sampled from the prefill logits and
+        accounted to prefill/TTFT; only subsequent tokens count as decode
+        throughput.  ``warmup`` (default) compiles every path against a
+        sacrificial pool first, so compile time lands in ``compile_s``
+        instead of polluting every latency and throughput number.
         """
         pending = deque(sorted(requests, key=lambda r: (r.arrival_s, r.rid)))
         budgets = {r.rid: self._budget(r) for r in pending}
         compile_s = (self._warmup([r.prompt_len for r in pending])
                      if warmup else 0.0)
         cache, slots = self._init_pool()
+        if self.paged:
+            self._reset_paging()
         free: List[int] = list(range(self.n_slots))[::-1]
         slot_req: Dict[int, Request] = {}
         streams: Dict[int, List[int]] = {}
@@ -220,6 +367,9 @@ class ServeEngine:
         busy_slot_ticks = 0
         prefill_s = 0.0
         decode_s = 0.0
+        interleaved_ticks = 0
+        cached_prompt_tokens = 0
+        total_prompt_tokens = 0
         t0 = time.perf_counter()
 
         def retire(slot: int, r: Request) -> None:
@@ -233,45 +383,25 @@ class ServeEngine:
             )
             slot_req.pop(slot, None)
             free.append(slot)
+            if self.paged:
+                # drop this request's references; pages also held by the
+                # radix tree survive for future prefix hits, private tail
+                # pages free immediately
+                blocks = self._req_blocks.pop(r.rid, None)
+                if blocks:
+                    self._alloc.release(blocks)
+                self._pt[slot, :] = -1
+                self._pt_dev = None
 
-        while pending or slot_req:
-            now = time.perf_counter() - t0
-            while free and pending and (not realtime
-                                        or pending[0].arrival_s <= now):
-                r = pending.popleft()
-                slot = free.pop()
-                admit = self._admit_fn(r.prompt_len)
-                ta = time.perf_counter()
-                cache, slots, tok, fin = admit(
-                    self.params, cache, slots,
-                    jnp.asarray(r.prompt, jnp.int32),
-                    jnp.int32(slot), request_key(r.seed),
-                    jnp.float32(r.temperature), jnp.int32(r.top_k),
-                    jnp.float32(r.top_p), jnp.int32(budgets[r.rid]),
-                    jnp.int32(r.eos_id))
-                tok, fin = jax.device_get((tok, fin))
-                tb = time.perf_counter()
-                prefill_s += tb - ta
-                arrival = r.arrival_s if realtime else 0.0
-                ttft = tb - t0 - arrival
-                ttfts.append(ttft)
-                streams[r.rid] = [int(tok)]
-                rows[r.rid] = {
-                    "id": r.rid, "slot": slot, "prompt_len": r.prompt_len,
-                    "max_new": budgets[r.rid], "arrival_s": arrival,
-                    "ttft_s": round(ttft, 6),
-                }
-                slot_req[slot] = r
-                if bool(fin):
-                    retire(slot, r)
-                now = time.perf_counter() - t0
-            if not slot_req:
-                if pending and realtime:
-                    time.sleep(min(max(pending[0].arrival_s - now, 0.0), 0.05))
-                continue
+        def do_tick() -> None:
+            nonlocal cache, slots, ticks, busy_slot_ticks, decode_s
             ta = time.perf_counter()
-            cache, slots, sampled, finished = self._tick(self.params, cache,
-                                                         slots)
+            if self.paged:
+                cache, slots, sampled, finished = self._tick(
+                    self.params, cache, slots, self._pages_dev())
+            else:
+                cache, slots, sampled, finished = self._tick(
+                    self.params, cache, slots)
             sampled, finished = jax.device_get((sampled, finished))
             dt = time.perf_counter() - ta
             decode_s += dt
@@ -284,11 +414,148 @@ class ServeEngine:
                 if bool(finished[slot]):
                     retire(slot, r)
 
+        def admit_dense(r: Request) -> None:
+            nonlocal cache, slots, prefill_s
+            slot = free.pop()
+            admit = self._admit_fn(r.prompt_len)
+            ta = time.perf_counter()
+            cache, slots, tok, fin = admit(
+                self.params, cache, slots,
+                jnp.asarray(r.prompt, jnp.int32),
+                jnp.int32(slot), request_key(r.seed),
+                jnp.float32(r.temperature), jnp.int32(r.top_k),
+                jnp.float32(r.top_p), jnp.int32(budgets[r.rid]),
+                jnp.int32(r.eos_id))
+            tok, fin = jax.device_get((tok, fin))
+            tb = time.perf_counter()
+            prefill_s += tb - ta
+            finish_admission(r, slot, int(tok), bool(fin), tb - ta, tb,
+                             cached=0, n_chunks=1)
+
+        def admit_paged(r: Request) -> bool:
+            """Map pages, prefill the un-cached tail in fixed-size chunks
+            (interleaving one decode tick between chunks so co-resident
+            streams never stall longer than one chunk), sample the first
+            token, and publish the prompt's full pages to the radix tree.
+            Returns False when the pool cannot hold the request yet."""
+            nonlocal cache, slots, prefill_s, interleaved_ticks
+            nonlocal cached_prompt_tokens, total_prompt_tokens
+            P, budget = r.prompt_len, budgets[r.rid]
+            bl, C = self.block_len, self.prefill_chunk
+            prompt = [int(t) for t in r.prompt]
+            n_pages_req = -(-(P + budget) // bl)
+            matched = []
+            if self.prefix_cache:
+                # match whole pages, capped one token short of the prompt
+                # (the last token must be recomputed for first-token logits)
+                # and floored to the chunk grid: the un-cached tail then
+                # starts exactly where a cold prefill's chunk would, which
+                # is what keeps hit == cold bitwise
+                matched = self._radix.match(prompt, ((P - 1) // C) * C)
+                keep = (len(matched) * bl // C) * C // bl
+                matched = matched[:keep]
+            n_fresh = n_pages_req - len(matched)
+            if n_fresh > self._alloc.n_free:
+                self._radix.evict(n_fresh)
+            if n_fresh > self._alloc.n_free:
+                if not slot_req:
+                    raise EngineError(
+                        f"request {r.rid}: needs {n_fresh} blocks, "
+                        f"{self._alloc.n_free}/{self.n_blocks} free with no "
+                        f"requests in flight — pool too small")
+                return False        # wait for a retirement
+            ta = time.perf_counter()
+            for node in matched:
+                self._alloc.retain(node.block)
+            blocks = [n.block for n in matched] + self._alloc.alloc(n_fresh)
+            slot = free.pop()
+            self._pt[slot, :] = -1
+            self._pt[slot, :len(blocks)] = blocks
+            self._pt_dev = None
+            self._req_blocks[r.rid] = blocks
+            row_dev = jnp.asarray(self._pt[slot])
+            S = len(matched) * bl
+            cached_prompt_tokens += S
+            total_prompt_tokens += P
+            n_chunks = -(-(P - S) // C)
+            logits = None
+            for ci in range(n_chunks):
+                lo = S + ci * C
+                seg = prompt[lo:min(lo + C, P)]
+                toks = np.zeros((C,), np.int32)
+                toks[:len(seg)] = seg
+                logits, cache = self._chunk(
+                    self.params, cache, row_dev, jnp.asarray(toks),
+                    jnp.int32(lo), jnp.int32(len(seg)))
+                if ci < n_chunks - 1 and slot_req:
+                    prefill_s += time.perf_counter() - ta
+                    do_tick()       # co-residents advance between chunks
+                    interleaved_ticks += 1
+                    ta = time.perf_counter()
+            tok = int(jax.device_get(self._first(
+                logits, request_key(r.seed), jnp.float32(r.temperature),
+                jnp.int32(r.top_k), jnp.float32(r.top_p))))
+            fin = (r.eos_id >= 0 and tok == r.eos_id) or budget <= 1
+            slots = self._set_slot(
+                slots, jnp.int32(slot), jnp.int32(tok), jnp.int32(P),
+                jnp.asarray(not fin), jnp.int32(budget),
+                jnp.int32(r.eos_id), request_key(r.seed),
+                jnp.float32(r.temperature), jnp.int32(r.top_k),
+                jnp.float32(r.top_p))
+            tb = time.perf_counter()
+            prefill_s += tb - ta
+            if self.prefix_cache:
+                # publish the prompt's full pages (chunk-written, canonical);
+                # existing nodes win, so a re-derived duplicate page stays
+                # private and frees at retire
+                self._radix.insert(prompt[:(P // bl) * bl], blocks)
+            finish_admission(r, slot, tok, fin, tb - ta, tb,
+                             cached=S, n_chunks=n_chunks)
+            return True
+
+        def finish_admission(r, slot, tok, fin, admit_s, tb, *, cached,
+                             n_chunks):
+            arrival = r.arrival_s if realtime else 0.0
+            ttft = tb - t0 - arrival
+            ttfts.append(ttft)
+            streams[r.rid] = [tok]
+            rows[r.rid] = {
+                "id": r.rid, "slot": slot, "prompt_len": r.prompt_len,
+                "max_new": budgets[r.rid], "arrival_s": arrival,
+                "ttft_s": round(ttft, 6),
+                "prefill_s": round(admit_s, 6),
+                "cached_tokens": cached,
+                "prefill_chunks": n_chunks,
+            }
+            slot_req[slot] = r
+            if fin:
+                retire(slot, r)
+
+        while pending or slot_req:
+            now = time.perf_counter() - t0
+            while free and pending and (not realtime
+                                        or pending[0].arrival_s <= now):
+                r = pending[0]
+                if self.paged:
+                    if not admit_paged(r):
+                        break
+                else:
+                    admit_dense(r)
+                pending.popleft()
+                now = time.perf_counter() - t0
+            if not slot_req:
+                if pending and realtime:
+                    time.sleep(min(max(pending[0].arrival_s - now, 0.0), 0.05))
+                continue
+            do_tick()
+
         elapsed = time.perf_counter() - t0
         gen_tokens = sum(len(s) for s in streams.values())
         decode_tokens = gen_tokens - len(streams)   # firsts belong to prefill
         util = (busy_slot_ticks / (ticks * self.n_slots)) if ticks else 0.0
         decode_tok_s = decode_tokens / decode_s if decode_s > 0 else 0.0
+        hit = [w for w in rows.values() if w["cached_tokens"] > 0]
+        cold = [w for w in rows.values() if w["cached_tokens"] == 0]
         result: Dict[str, Any] = {
             "n_slots": self.n_slots,
             "max_len": self.max_len,
@@ -309,11 +576,34 @@ class ServeEngine:
             "slot_utilization": round(util, 4),
             "ttft_s": percentiles(ttfts),
             "tpot_ms": percentiles([t * 1000 for t in tpot]),
+            # hit/cold split: prefix-cache hits should beat cold prefills on
+            # both the queue-free admission time and end-to-end TTFT
+            "prefill_cache_hit_rate": (
+                round(cached_prompt_tokens / total_prompt_tokens, 4)
+                if total_prompt_tokens else 0.0),
+            "ttft_hit_s": percentiles([w["ttft_s"] for w in hit]),
+            "ttft_cold_s": percentiles([w["ttft_s"] for w in cold]),
+            "prefill_hit_s": percentiles([w["prefill_s"] for w in hit]),
+            "prefill_cold_s": percentiles([w["prefill_s"] for w in cold]),
+            "interleaved_decode_ticks": interleaved_ticks,
             "requests": [rows[rid] for rid in sorted(rows)],
         }
+        if self.paged:
+            result["paging"] = {
+                "block_len": self.block_len,
+                "n_blocks": self.n_blocks,
+                "max_pages": self.max_pages,
+                "prefill_chunk": self.prefill_chunk,
+                "prefix_cache": self.prefix_cache,
+                "peak_blocks": int(self._alloc.peak_used),
+                "free_blocks": int(self._alloc.n_free),
+                "cached_blocks": int(self._radix.n_nodes),
+                "evictions": int(self._radix.evictions),
+            }
         self.log(
             f"engine: {result['n_requests']} requests, "
             f"{gen_tokens} tokens in {elapsed:.3f}s "
             f"({result['tok_s']} tok/s, decode {result['decode_tok_s']} "
-            f"tok/s, util {util:.0%})")
+            f"tok/s, util {util:.0%}, "
+            f"hit rate {result['prefill_cache_hit_rate']:.0%})")
         return result

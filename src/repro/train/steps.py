@@ -130,7 +130,7 @@ def make_serve_step(model, mesh_ctx=None):
 
 
 def make_engine_step(model, mesh_ctx: Optional[B.MeshContext] = None,
-                     greedy: bool = False):
+                     greedy: bool = False, paged: bool = False):
     """The continuous-batching decode tick (``repro.serve`` engine hot path).
 
     One fused step over the whole slot pool: decode every slot at its own
@@ -161,12 +161,16 @@ def make_engine_step(model, mesh_ctx: Optional[B.MeshContext] = None,
     engine: a greedy tick and the general tick are different fused
     programs, so mixing them within one determinism comparison would
     reintroduce batch-shape-style low-bit drift.
+
+    ``paged=True`` compiles the tick against a block-pool cache: it takes
+    the per-slot page tables as a fourth (non-donated) argument and gates
+    cache writes on ``slots["active"]`` — a retired slot's blocks may
+    already be freed and remapped, so its frozen-position write must be
+    dropped, not just ignored.
     """
     from ..serve.sampling import sample_tokens
 
-    def engine_step(params, cache, slots):
-        logits, new_cache = model.decode_step(params, cache, slots["tokens"],
-                                              slots["pos"], mesh_ctx)
+    def _sample_and_advance(slots, logits, new_cache):
         if greedy:
             sampled = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         else:
@@ -189,4 +193,32 @@ def make_engine_step(model, mesh_ctx: Optional[B.MeshContext] = None,
         )
         return new_cache, new_slots, sampled, finished
 
+    if paged:
+        def engine_step(params, cache, slots, pages):
+            logits, new_cache = model.decode_step(
+                params, cache, slots["tokens"], slots["pos"], mesh_ctx,
+                pages=pages, active=slots["active"])
+            return _sample_and_advance(slots, logits, new_cache)
+    else:
+        def engine_step(params, cache, slots):
+            logits, new_cache = model.decode_step(
+                params, cache, slots["tokens"], slots["pos"], mesh_ctx)
+            return _sample_and_advance(slots, logits, new_cache)
+
     return engine_step
+
+
+def make_prefill_chunk_step(model, mesh_ctx: Optional[B.MeshContext] = None):
+    """One fixed-shape chunk of a paged admission (``model.prefill_chunk``).
+
+    The chunk program's shape depends only on (chunk_len, pool shape) —
+    never on the prompt length — which is what makes a cached page's
+    values bitwise canonical and a long admission splittable across decode
+    ticks.  Jit with the cache donated; ``start``/``n_valid`` are traced.
+    """
+
+    def chunk_step(params, cache, pages_row, tokens, start, n_valid):
+        return model.prefill_chunk(params, cache, pages_row, tokens, start,
+                                   n_valid, mesh_ctx=mesh_ctx)
+
+    return chunk_step
