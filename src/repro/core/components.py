@@ -31,6 +31,13 @@ IF.OptimizerIF.register(AdamW)
 IF.TokenizerIF.register(ByteTokenizer)
 IF.TokenizerIF.register(BpeTokenizer)
 IF.DatasetIF.register(ChunkedLMDataset)
+from ..posttrain.dpo import PreferencePairDataset  # noqa: E402
+from ..posttrain.lora import FrozenBaseOptimizer  # noqa: E402
+from ..posttrain.sft import PackedSFTDataset  # noqa: E402
+
+IF.DatasetIF.register(PackedSFTDataset)
+IF.DatasetIF.register(PreferencePairDataset)
+IF.OptimizerIF.register(FrozenBaseOptimizer)
 IF.LoaderIF.register(ShardedLoader)
 IF.LoaderIF.register(PrefetchLoader)
 IF.MeshProviderIF.register(MESH.MeshProvider)
@@ -108,6 +115,14 @@ def register_all() -> None:
          IF.DatasetIF)
     _reg("dataset", "synthetic",
          _synthetic_chunked,
+         IF.DatasetIF)
+    # post-training datasets (loss-masked SFT rows, DPO preference pairs)
+    from ..posttrain.dpo import preference_synthetic_dataset
+    from ..posttrain.sft import sft_jsonl_dataset, sft_synthetic_dataset
+
+    _reg("dataset", "sft_synthetic", sft_synthetic_dataset, IF.DatasetIF)
+    _reg("dataset", "sft_jsonl", sft_jsonl_dataset, IF.DatasetIF)
+    _reg("dataset", "preference_synthetic", preference_synthetic_dataset,
          IF.DatasetIF)
     _reg("loader", "sharded",
          lambda dataset, global_batch, dp_rank=0, dp_size=1:

@@ -53,19 +53,18 @@ class Gym:
         else:
             mesh_ctx, storage_axes = None, ()
         self.mesh_ctx = mesh_ctx
-        step_fn = ST.make_train_step(
-            self.model, self.optimizer, mesh_ctx, storage_axes,
-            grad_accum=self.grad_accum,
-        )
+        step_fn = self._build_step(mesh_ctx, storage_axes)
         if self.mesh is not None:
             state_sh, self.shard_warnings = PL.train_state_shardings(
                 self.plan, self.mesh, self.model, self.optimizer,
                 seed=self.seed,
             )
             self._state_sh = state_sh
-            self._step = jax.jit(step_fn, in_shardings=(state_sh, None),
-                                 out_shardings=(state_sh, None),
-                                 donate_argnums=(0,))
+            extra_sh = tuple(self._extra_step_shardings(state_sh))
+            jitted = jax.jit(step_fn,
+                             in_shardings=(state_sh, None) + extra_sh,
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
             with self.mesh:
                 state = jax.jit(
                     lambda r: ST.init_train_state(self.model, self.optimizer, r),
@@ -74,11 +73,36 @@ class Gym:
         else:
             self.shard_warnings = []
             self._state_sh = None
-            self._step = jax.jit(step_fn, donate_argnums=(0,))
+            jitted = jax.jit(step_fn, donate_argnums=(0,))
             state = ST.init_train_state(
                 self.model, self.optimizer, jax.random.PRNGKey(self.seed)
             )
+        self._jit_step = jitted
+        # extra step inputs (e.g. a DPO reference-params tree) are traced
+        # arguments, NOT jit-closure constants: closing over them would bake
+        # device buffers into the executable and double the weight memory
+        self._step = lambda s, b: self._jit_step(s, b,
+                                                 *self._step_extra_args())
         return state
+
+    # -- subclass hooks ----------------------------------------------------
+    # A Gym variant (e.g. the DPO gym) changes WHAT a step computes by
+    # overriding these three; the loop, sharding, checkpointing, prefetch
+    # and metrics machinery stay shared.
+    def _build_step(self, mesh_ctx, storage_axes):
+        """The (state, batch, *extras) -> (state, metrics) step function."""
+        return ST.make_train_step(
+            self.model, self.optimizer, mesh_ctx, storage_axes,
+            grad_accum=self.grad_accum,
+        )
+
+    def _extra_step_shardings(self, state_sh) -> tuple:
+        """in_shardings for the extra step arguments (sharded meshes only)."""
+        return ()
+
+    def _step_extra_args(self) -> tuple:
+        """Extra positional arguments appended to every step call."""
+        return ()
 
     # -- checkpointing -----------------------------------------------------
     def _ckpt(self):

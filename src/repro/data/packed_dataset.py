@@ -66,11 +66,31 @@ class ChunkedLMDataset:
 
 
 def _vectorized_dataset(ds) -> bool:
-    """Use ``sample_batch`` only when it is at least as derived as
-    ``sample`` in the dataset's MRO: a subclass that overrides ``sample``
-    (the DatasetIF method) without overriding ``sample_batch`` would
-    otherwise have its override silently bypassed by the inherited
-    vectorized path."""
+    """Does this dataset's ``sample_batch`` get the fast gather path?
+
+    The contract, in priority order:
+
+    1. An explicit ``vectorized`` attribute (class- or instance-level
+       bool) decides outright — the opt-in for datasets that define
+       ``sample_batch`` somewhere awkward in their MRO (wrappers,
+       mixins), and the opt-out for datasets whose ``sample_batch``
+       exists but must not be used batched.
+    2. Otherwise ``sample_batch`` is used when it is defined *at least as
+       derived* as ``sample`` in the MRO.  A subclass that overrides
+       either method directly (``PackedSFTDataset`` overriding both, or a
+       ``ChunkedLMDataset`` subclass overriding only ``sample_batch``)
+       passes; a subclass that overrides only ``sample`` (the DatasetIF
+       method) does NOT — its override would be silently bypassed by the
+       inherited vectorized path.
+
+    ``sample_batch(idxs)`` may return either the legacy ``(tokens,
+    labels)`` 2-tuple or a dict batch (e.g. ``{"tokens", "labels",
+    "loss_mask"}``); :class:`ShardedLoader` forwards dict batches as-is.
+    Indices wrap modulo the dataset length (the loader streams raw
+    increasing indices)."""
+    explicit = getattr(ds, "vectorized", None)
+    if explicit is not None:
+        return bool(explicit)
     mro = type(ds).__mro__
     sb = next((i for i, c in enumerate(mro) if "sample_batch" in c.__dict__),
               None)
@@ -95,18 +115,30 @@ class ShardedLoader:
         self.local_batch = self.global_batch // self.dp_size
 
     def batches(self, steps: int, start_step: int = 0) -> Iterator[dict]:
+        """Yield dict batches.  A dataset whose ``sample_batch``/``sample``
+        returns a dict (the loss-mask contract — see
+        :func:`_vectorized_dataset`) is forwarded key-for-key; the legacy
+        ``(tokens, labels)`` tuple becomes ``{"tokens", "labels"}``."""
         vectorized = _vectorized_dataset(self.dataset)
         for step in range(start_step, start_step + steps):
             lo = step * self.global_batch + self.dp_rank * self.local_batch
             if vectorized:
-                toks, labs = self.dataset.sample_batch(
+                out = self.dataset.sample_batch(
                     np.arange(lo, lo + self.local_batch, dtype=np.int64)
                 )
+                if isinstance(out, dict):
+                    yield out
+                    continue
+                toks, labs = out
             else:  # custom DatasetIF components only define sample()
-                pairs = [self.dataset.sample(lo + j)
-                         for j in range(self.local_batch)]
-                toks = np.stack([p[0] for p in pairs])
-                labs = np.stack([p[1] for p in pairs])
+                samples = [self.dataset.sample(lo + j)
+                           for j in range(self.local_batch)]
+                if isinstance(samples[0], dict):
+                    yield {k: np.stack([s[k] for s in samples])
+                           for k in samples[0]}
+                    continue
+                toks = np.stack([s[0] for s in samples])
+                labs = np.stack([s[1] for s in samples])
             yield {"tokens": toks, "labels": labs}
 
 

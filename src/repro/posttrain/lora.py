@@ -1,0 +1,361 @@
+"""LoRA adapters as a params-transform over existing architectures.
+
+A :class:`LoRAModel` wraps any registered :class:`~repro.models.base.Model`
+without touching its forward code: ``init`` returns the base tree plus a
+parallel ``lora`` subtree of low-rank ``{a, b}`` factor pairs, and every
+forward method first *merges* ``W + (alpha/rank) * a @ b`` and then
+delegates to the wrapped model.  Because ``b`` is zero-initialized, a
+freshly-injected adapter is an exact no-op: the merged forward is the base
+forward, which is what makes warmstarting a LoRA run from a pretrained
+checkpoint well-defined.
+
+The frozen/trainable split is a *path predicate* (everything under the
+top-level ``lora`` key trains; everything else is frozen), enforced by
+:class:`FrozenBaseOptimizer` — a wrapper that zeroes base-param gradients
+and pins base params (and their f32 master copies) after the inner update,
+so AdamW's always-on weight decay cannot drift the frozen base.
+
+Adapter checkpoints reuse the elastic-checkpoint format with only the
+``params/lora/...`` leaves (:func:`save_adapter` / :func:`load_adapter`);
+:func:`export_merged` folds the adapters into the base weights and writes
+the flat per-layer export via :mod:`repro.ckpt.export`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import base as B
+from ..models.common import dense_init
+
+#: top-level params key holding the adapter subtree.
+ADAPTER_KEY = "lora"
+
+_DEFAULT_TARGETS = ("wq", "wk", "wv", "wo", "w_up", "w_gate", "w_down")
+
+
+@dataclasses.dataclass(frozen=True)
+class LoRAConfig:
+    """Which leaves get adapters, and at what rank/scale.
+
+    ``targets`` are fnmatch patterns matched against the *last* path
+    component of each base-param leaf; only matrix-shaped leaves (>= 2
+    non-layer dims) are eligible — vectors (norm scales, biases) never
+    get factors."""
+
+    rank: int = 8
+    alpha: float = 16.0
+    targets: Tuple[str, ...] = _DEFAULT_TARGETS
+
+    def __post_init__(self):
+        if self.rank < 1:
+            raise ValueError(f"LoRA rank must be >= 1, got {self.rank}")
+        if not self.targets:
+            raise ValueError("LoRA needs at least one target pattern")
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / self.rank
+
+
+def _targeted(name: str, shape: Tuple[int, ...], axes: Tuple[str, ...],
+              cfg: LoRAConfig) -> bool:
+    stacked = bool(axes) and axes[0] == B.LAYER
+    core = shape[1:] if stacked else shape
+    if len(core) < 2:
+        return False
+    return any(fnmatch.fnmatch(name, pat) for pat in cfg.targets)
+
+
+def _is_pair(node: Any) -> bool:
+    return isinstance(node, dict) and set(node) == {"a", "b"}
+
+
+def _walk_targets(shapes: Dict[str, Any], axes: Dict[str, Any],
+                  cfg: LoRAConfig,
+                  make: Callable[[str, Any, Tuple[str, ...]], Any]
+                  ) -> Dict[str, Any]:
+    """Mirror the base tree, keeping only targeted leaves (as ``make``'s
+    output); prunes empty subtrees so the adapter tree stays minimal."""
+    out: Dict[str, Any] = {}
+    for key in shapes:
+        node, ax = shapes[key], axes[key]
+        if isinstance(node, dict):
+            sub = _walk_targets(node, ax, cfg, make)
+            if sub:
+                out[key] = sub
+        elif _targeted(key, tuple(node.shape), tuple(ax), cfg):
+            out[key] = make(key, node, tuple(ax))
+    return out
+
+
+def _delta(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """The low-rank update ``a @ b`` (batched over a leading layer dim when
+    the factors are stacked).  HIGHEST precision: the merged-export
+    round-trip test asserts *bitwise* logits equality between merge-then-
+    forward and forward-with-merged, so the contraction must not be free to
+    reassociate differently across the two paths."""
+    hi = jax.lax.Precision.HIGHEST
+    if a.ndim == 2:                     # a [d, r] @ b [r, *out]
+        return jnp.einsum("dr,r...->d...", a, b, precision=hi)
+    return jnp.einsum("ldr,lr...->ld...", a, b, precision=hi)  # stacked
+
+
+def merge_tree(base_params: Dict[str, Any], adapters: Dict[str, Any],
+               scale: float) -> Dict[str, Any]:
+    """Fold ``W + scale * a @ b`` into a copy of the base tree (f32 math,
+    cast back to the leaf dtype)."""
+    out = dict(base_params)
+    for key, node in adapters.items():
+        if _is_pair(node):
+            w = base_params[key]
+            d = _delta(node["a"].astype(jnp.float32),
+                       node["b"].astype(jnp.float32))
+            out[key] = (w.astype(jnp.float32) + scale * d).astype(w.dtype)
+        else:
+            out[key] = merge_tree(base_params[key], node, scale)
+    return out
+
+
+def is_adapter_path(path: str) -> bool:
+    """True for '/'-joined *param* paths inside the adapter subtree."""
+    return path.split("/", 1)[0] == ADAPTER_KEY
+
+
+class LoRAModel(B.Model):
+    """Frozen base + trainable low-rank factors, same Model interface.
+
+    Params are ``{**base_params, "lora": {...}}`` where the ``lora``
+    subtree mirrors the base structure at targeted leaves, each replaced
+    by an ``{a, b}`` pair: for a base leaf ``[d_in, *d_out]``, ``a`` is
+    ``[d_in, r]`` (fan-in init) and ``b`` is ``[r, *d_out]`` (zeros);
+    stacked leaves (leading :data:`~repro.models.base.LAYER` axis) keep
+    the layer dim on both factors.  All forward methods merge on the fly
+    and delegate, so the wrapper composes with every cache/serving path
+    the base supports."""
+
+    def __init__(self, base: B.Model, lora: LoRAConfig):
+        self.base = base
+        self.cfg = base.cfg
+        self.lora = lora
+        self._axes = base.param_axes()
+        self._shapes = jax.eval_shape(base.init, jax.random.PRNGKey(0))
+        if ADAPTER_KEY in self._shapes:
+            raise ValueError(
+                f"base model already has a top-level {ADAPTER_KEY!r} params "
+                f"entry; cannot inject adapters")
+        n = len(jax.tree_util.tree_leaves(self.adapter_shapes()))
+        if n == 0:
+            raise ValueError(
+                f"LoRA targets {list(lora.targets)} match no matrix leaves "
+                f"of {type(base).__name__}")
+
+    # -- structure ---------------------------------------------------------
+    def adapter_shapes(self) -> Dict[str, Any]:
+        """The ``lora`` subtree as ShapeDtypeStructs (layout contract)."""
+        def make(_name, leaf, axes):
+            stacked = axes[0] == B.LAYER
+            sh = tuple(leaf.shape)
+            r = self.lora.rank
+            if stacked:
+                a = (sh[0], sh[1], r)
+                b = (sh[0], r) + sh[2:]
+            else:
+                a = (sh[0], r)
+                b = (r,) + sh[1:]
+            return {"a": jax.ShapeDtypeStruct(a, leaf.dtype),
+                    "b": jax.ShapeDtypeStruct(b, leaf.dtype)}
+
+        return _walk_targets(self._shapes, self._axes, self.lora, make)
+
+    def init(self, rng) -> Dict[str, Any]:
+        base_params = self.base.init(rng)
+        ad_rng = jax.random.fold_in(rng, 0x10AA)
+        counter = [0]
+
+        def make(_name, leaf, axes):
+            stacked = axes[0] == B.LAYER
+            sh = tuple(leaf.shape)
+            r = self.lora.rank
+            k = jax.random.fold_in(ad_rng, counter[0])
+            counter[0] += 1
+            if stacked:
+                a = dense_init(k, (sh[0], sh[1], r), in_axis_size=sh[1],
+                               dtype=leaf.dtype)
+                b = jnp.zeros((sh[0], r) + sh[2:], leaf.dtype)
+            else:
+                a = dense_init(k, (sh[0], r), dtype=leaf.dtype)
+                b = jnp.zeros((r,) + sh[1:], leaf.dtype)
+            return {"a": a, "b": b}
+
+        adapters = _walk_targets(self._shapes, self._axes, self.lora, make)
+        return {**base_params, ADAPTER_KEY: adapters}
+
+    def param_axes(self) -> Dict[str, Any]:
+        def make(_name, _leaf, axes):
+            stacked = axes[0] == B.LAYER
+            if stacked:
+                return {"a": (B.LAYER, axes[1], B.LORA),
+                        "b": (B.LAYER, B.LORA) + tuple(axes[2:])}
+            return {"a": (axes[0], B.LORA),
+                    "b": (B.LORA,) + tuple(axes[1:])}
+
+        adapters = _walk_targets(self._shapes, self._axes, self.lora, make)
+        return {**self._axes, ADAPTER_KEY: adapters}
+
+    def merge(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        """Base-shaped params with the adapters folded in — what every
+        forward method (and the merged export) runs on."""
+        base_params = {k: v for k, v in params.items() if k != ADAPTER_KEY}
+        return merge_tree(base_params, params[ADAPTER_KEY], self.lora.scale)
+
+    # -- forward: merge then delegate --------------------------------------
+    def apply(self, params, batch, mesh_ctx=None, storage_axes=()):
+        return self.base.apply(self.merge(params), batch, mesh_ctx,
+                               storage_axes)
+
+    def prefill(self, params, *args, **kw):
+        return self.base.prefill(self.merge(params), *args, **kw)
+
+    def prefill_into(self, params, *args, **kw):
+        return self.base.prefill_into(self.merge(params), *args, **kw)
+
+    def prefill_chunk(self, params, *args, **kw):
+        return self.base.prefill_chunk(self.merge(params), *args, **kw)
+
+    def decode_step(self, params, *args, **kw):
+        return self.base.decode_step(self.merge(params), *args, **kw)
+
+    # cache management carries no params: pure delegation
+    def init_cache(self, *args, **kw):
+        return self.base.init_cache(*args, **kw)
+
+    def init_paged_cache(self, *args, **kw):
+        return self.base.init_paged_cache(*args, **kw)
+
+    def insert_cache(self, *args, **kw):
+        return self.base.insert_cache(*args, **kw)
+
+    def supports_paged_cache(self) -> bool:
+        return self.base.supports_paged_cache()
+
+
+def zero_adapters(params: Dict[str, Any]) -> Dict[str, Any]:
+    """Params with the adapter subtree zeroed: merged forward == frozen
+    base.  The DPO reference policy under LoRA is exactly this tree."""
+    zeroed = jax.tree_util.tree_map(jnp.zeros_like, params[ADAPTER_KEY])
+    return dict(params, **{ADAPTER_KEY: zeroed})
+
+
+# ---------------------------------------------------------------------------
+# frozen/trainable split
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FrozenBaseOptimizer:
+    """Optimizer wrapper enforcing a per-leaf trainable predicate.
+
+    Grads of frozen leaves are zeroed *before* the inner update and the
+    frozen params (plus their ``opt.master`` f32 copies, when the inner
+    optimizer keeps them) are pinned back *after* it — zeroing grads alone
+    is not enough because AdamW applies decoupled weight decay to every
+    matrix leaf each step."""
+
+    inner: Any
+    trainable: Callable[[str], bool] = is_adapter_path
+
+    def _mask(self, params):
+        from ..ckpt.format import flatten_with_paths
+
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        flags = [bool(self.trainable(path))
+                 for path, _ in flatten_with_paths(params)]
+        assert len(flags) == len(leaves)
+        return jax.tree_util.tree_unflatten(treedef, flags)
+
+    def init(self, params):
+        return self.inner.init(params)
+
+    def update(self, grads, opt_state, params):
+        mask = self._mask(params)
+        grads = jax.tree_util.tree_map(
+            lambda t, g: g if t else jnp.zeros_like(g), mask, grads)
+        new_params, new_state = self.inner.update(grads, opt_state, params)
+        new_params = jax.tree_util.tree_map(
+            lambda t, new, old: new if t else old, mask, new_params, params)
+        if isinstance(new_state, dict) and "master" in new_state:
+            new_state = dict(new_state, master=jax.tree_util.tree_map(
+                lambda t, new, old: new if t else old,
+                self._mask(new_state["master"]),
+                new_state["master"], opt_state["master"]))
+        return new_params, new_state
+
+    def __getattr__(self, name):  # lr schedules, betas, ... for introspection
+        return getattr(self.inner, name)
+
+
+def n_trainable(params: Dict[str, Any],
+                trainable: Callable[[str], bool] = is_adapter_path
+                ) -> Tuple[int, int]:
+    """(trainable, total) param counts — the log line every LoRA run wants."""
+    from ..ckpt.format import flatten_with_paths
+
+    total = tr = 0
+    for path, leaf in flatten_with_paths(params):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        total += n
+        if trainable(path):
+            tr += n
+    return tr, total
+
+
+# ---------------------------------------------------------------------------
+# adapter checkpoints + merged export
+# ---------------------------------------------------------------------------
+def save_adapter(ckpt_dir: str, step: int, params: Dict[str, Any],
+                 extra: Optional[Dict[str, Any]] = None) -> str:
+    """Write an adapter-only checkpoint (just the ``params/lora/...``
+    leaves) in the elastic format: :func:`load_adapter` and plain
+    ``EL.restore(..., strict=False)`` both read it back."""
+    from ..ckpt.format import flatten_with_paths, write_checkpoint
+
+    sub = {ADAPTER_KEY: params[ADAPTER_KEY]}
+    arrays = {f"params/{path}": np.asarray(jax.device_get(leaf))
+              for path, leaf in flatten_with_paths(sub)}
+    return write_checkpoint(ckpt_dir, step, arrays,
+                            extra={"adapter_only": True, **(extra or {})})
+
+
+def load_adapter(params: Dict[str, Any], path: str,
+                 shardings: Optional[Dict[str, Any]] = None
+                 ) -> Dict[str, Any]:
+    """Restore the adapter subtree from an adapter(-or-full) checkpoint
+    into ``params``, leaving the base untouched."""
+    from ..ckpt import elastic as EL
+
+    like = {ADAPTER_KEY: params[ADAPTER_KEY]}
+    sh = ({ADAPTER_KEY: shardings[ADAPTER_KEY]}
+          if shardings is not None else None)
+    sub = EL.restore(like, path, sh, prefix="params")
+    return dict(params, **{ADAPTER_KEY: sub[ADAPTER_KEY]})
+
+
+def export_merged(model: LoRAModel, params: Dict[str, Any],
+                  out_dir: str) -> str:
+    """Merge adapters into the base weights and write the flat per-layer
+    export (the deploy artifact: serve it like any base checkpoint)."""
+    from ..ckpt.export import export_flat
+
+    merged = jax.jit(model.merge)(params)
+    return export_flat(jax.device_get(merged), out_dir)
+
+
+__all__: List[str] = [
+    "ADAPTER_KEY", "LoRAConfig", "LoRAModel", "FrozenBaseOptimizer",
+    "merge_tree", "zero_adapters", "is_adapter_path", "n_trainable",
+    "save_adapter", "load_adapter", "export_merged",
+]

@@ -2,6 +2,8 @@
 
   python -m repro train  --config run.yaml [--set path=value ...]
   python -m repro warmstart --config run.yaml [--source ckpt_dir] [--set ...]
+  python -m repro sft    --config run.yaml [--set ...]
+  python -m repro dpo    --config run.yaml [--set ...]
   python -m repro bench  --config run.yaml [--set ...]
   python -m repro dryrun --config run.yaml [--set ...] [--json out.json]
   python -m repro serve  --config run.yaml [--set ...]
@@ -54,6 +56,12 @@ def build_parser() -> argparse.ArgumentParser:
     w.add_argument("--source", default="",
                    help="checkpoint dir (shorthand for "
                         "--set run.warmstart.source=...)")
+    _add_kind_parser(sub, "sft",
+                     "supervised finetuning: loss-masked prompt/response "
+                     "batches, optionally through LoRA adapters")
+    _add_kind_parser(sub, "dpo",
+                     "direct preference optimization against a frozen "
+                     "reference (static pairs or on-policy sampling)")
     _add_kind_parser(sub, "bench",
                      "measure compile / steady-state step time / tokens-sec "
                      "for a config; writes BENCH_<name>.json")
@@ -124,7 +132,7 @@ def _cmd_kind(args, kind: str) -> int:
     log = lambda msg: print(msg, flush=True)  # noqa: E731
     options = {"verbose": True}
     result = api.execute(cfg, options=options, log=log)
-    if kind in ("train", "warmstart"):
+    if kind in ("train", "warmstart", "sft", "dpo"):
         if result.get("logged_points"):
             print(f"done: {result['logged_points']} logged points; first loss "
                   f"{result['first_loss']:.4f} -> last "

@@ -18,9 +18,11 @@ from typing import Any, Callable, Dict, Optional, Type
 from ..config.registry import DEFAULT_REGISTRY as REG
 from .config import (
     BenchSettings,
+    DPOSettings,
     DryrunSettings,
     RunError,
     ServeSettings,
+    SFTSettings,
     TraceSettings,
     TrainSettings,
     WarmstartSettings,
@@ -73,6 +75,50 @@ def _loader_tokens(gym, steps: int) -> Optional[int]:
 # ---------------------------------------------------------------------------
 # train
 # ---------------------------------------------------------------------------
+def _strip_new_adapters(tree, donor_keys, prefix=""):
+    """Drop LoRA adapter subtrees the donor checkpoint does not carry.
+
+    A LoRA-wrapped gym has ``lora`` subtrees in its params (and mirrored
+    through AdamW's m/v/master) that a *base* pretraining checkpoint
+    cannot know about.  Like the derivable ``opt.master`` leaves, these
+    are exempted from warmstart strictness rather than forcing
+    ``strict: false`` everywhere: they keep their fresh init (factors from
+    ``LoRAModel.init``, zeroed optimizer moments).  Returns the stripped
+    tree plus ``{path: subtree}`` for :func:`_reattach`; a donor that DOES
+    carry the adapters (warmstarting from a previous SFT run) strips
+    nothing and restores them strictly."""
+    from ..posttrain.lora import ADAPTER_KEY
+
+    removed = {}
+
+    def walk(node, pfx):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for k, v in node.items():
+            p = f"{pfx}/{k}" if pfx else k
+            if k == ADAPTER_KEY and isinstance(v, dict) and not any(
+                    dk == p or dk.startswith(p + "/") for dk in donor_keys):
+                removed[p] = v
+                continue
+            out[k] = walk(v, p)
+        return out
+
+    return walk(tree, prefix), removed
+
+
+def _reattach(tree, removed, prefix=""):
+    """Put stripped subtrees back into a freshly-restored tree."""
+    for path, sub in removed.items():
+        rel = path[len(prefix) + 1:] if prefix else path
+        parts = rel.split("/")
+        node = tree
+        for part in parts[:-1]:
+            node = node[part]
+        node[parts[-1]] = sub
+    return tree
+
+
 def _apply_warmstart(gym, state, ws: WarmstartSettings, ctx) -> Any:
     """Init params (and optionally optimizer state) from another run's
     checkpoint, re-laid-out under THIS gym's plan/mesh — the Modalities
@@ -86,11 +132,12 @@ def _apply_warmstart(gym, state, ws: WarmstartSettings, ctx) -> Any:
         if os.path.exists(cand):
             source = cand  # relative to the run YAML, like sweep base_config
     sh = getattr(gym, "_state_sh", None)
+    donor_keys = EL.manifest_keys(source)
     if ws.optimizer == "carry":
         # params + optimizer state restore in ONE call, so f32 master
         # copies correctly suppress the compute params' lossy-cast warning
         donor_has_masters = any(k.startswith("opt/master/")
-                                for k in EL.manifest_keys(source))
+                                for k in donor_keys)
         opt_like, opt_sh = state["opt"], sh["opt"] if sh else None
         if not donor_has_masters and isinstance(opt_like, dict) \
                 and "master" in opt_like:
@@ -99,21 +146,33 @@ def _apply_warmstart(gym, state, ws: WarmstartSettings, ctx) -> Any:
             opt_like = {k: v for k, v in opt_like.items() if k != "master"}
             if opt_sh is not None:
                 opt_sh = {k: v for k, v in opt_sh.items() if k != "master"}
-        sub = EL.restore({"params": state["params"], "opt": opt_like},
-                         source,
-                         {"params": sh["params"], "opt": opt_sh}
-                         if sh else None,
-                         strict=ws.strict)
+        like, removed = _strip_new_adapters(
+            {"params": state["params"], "opt": opt_like}, donor_keys)
+        like_sh = None
+        if sh is not None:
+            like_sh, _ = _strip_new_adapters(
+                {"params": sh["params"], "opt": opt_sh}, donor_keys)
+        sub = _reattach(EL.restore(like, source, like_sh, strict=ws.strict),
+                        removed)
         state = dict(state, params=sub["params"],
                      opt=dict(state["opt"], **sub["opt"]))
         if not donor_has_masters:
             # the target's masters kept their random init: rebase them
             state = _rebase_master(state, sh)
     else:
-        params = EL.restore(state["params"], source,
-                            sh["params"] if sh else None,
-                            prefix="params", strict=ws.strict)
+        like, removed = _strip_new_adapters(state["params"], donor_keys,
+                                            prefix="params")
+        like_sh = None
+        if sh is not None:
+            like_sh, _ = _strip_new_adapters(sh["params"], donor_keys,
+                                             prefix="params")
+        params = _reattach(EL.restore(like, source, like_sh,
+                                      prefix="params", strict=ws.strict),
+                           removed, prefix="params")
         state = _rebase_master(dict(state, params=params), sh)
+    if removed:
+        ctx.log(f"warmstart: donor has no adapters — keeping fresh init "
+                f"for {sorted(removed)}")
     ctx.log(f"warmstart: params from {source} "
             f"(optimizer={ws.optimizer}, strict={ws.strict})")
     return state
@@ -135,13 +194,9 @@ def _rebase_master(state, sh):
     return dict(state, opt=dict(opt, master=master))
 
 
-def execute_train(ctx) -> Dict[str, Any]:
-    s: TrainSettings = ctx.cfg.settings
-    graph = _resolve_graph(ctx)
-    if s.gym_key not in graph:
-        raise RunError(f"resolved config has no {s.gym_key!r} entry; "
-                       f"top-level entries: {sorted(graph)}")
-    gym = graph[s.gym_key]
+def _prepare_gym(ctx, s, gym) -> None:
+    """Checkpoint-dir defaulting + fingerprint stamping, shared by every
+    train-shaped kind (train/warmstart/sft/dpo)."""
     # a run that checkpoints but names no directory lands in the run dir —
     # and a resuming run looks there even when IT doesn't checkpoint
     if (getattr(gym, "ckpt_every", 0) or s.resume) \
@@ -155,6 +210,14 @@ def execute_train(ctx) -> Dict[str, Any]:
 
         gym.run_fingerprint = _fp(
             {k: v for k, v in ctx.resolved_doc.items() if k != "run"})
+
+
+def _drive_gym(ctx, s, gym, before_run=None) -> Dict[str, Any]:
+    """Setup -> warmstart/resume -> run -> result dict: the train loop
+    shared by train/warmstart/sft/dpo.  ``before_run(state, resumed_from)
+    -> state`` hooks in after restore but before training (e.g. building
+    the DPO reference, sampling on-policy pairs)."""
+    _prepare_gym(ctx, s, gym)
     state = gym.setup()
     resumed_from = None
     if s.warmstart is not None:
@@ -166,6 +229,8 @@ def execute_train(ctx) -> Dict[str, Any]:
         else:
             ctx.log("resume: no committed checkpoint found, "
                     "starting from step 0")
+    if before_run is not None:
+        state = before_run(state, resumed_from)
     # `steps` is the TOTAL budget: a resumed run trains only the remainder,
     # so interrupted + resumed reproduces the uninterrupted loss curve
     steps = max(0, s.steps - (resumed_from or 0))
@@ -179,6 +244,7 @@ def execute_train(ctx) -> Dict[str, Any]:
         "wall_s": round(wall, 2),
         "logged_points": len(hist),
         "history": hist,
+        "_state": out["state"],
     }
     if resumed_from is not None:
         result["resumed_from"] = resumed_from
@@ -195,6 +261,17 @@ def execute_train(ctx) -> Dict[str, Any]:
     tokens = _loader_tokens(gym, steps)
     if tokens is not None:
         result["tokens_per_s"] = int(tokens / wall) if wall > 0 else 0
+    return result
+
+
+def execute_train(ctx) -> Dict[str, Any]:
+    s: TrainSettings = ctx.cfg.settings
+    graph = _resolve_graph(ctx)
+    if s.gym_key not in graph:
+        raise RunError(f"resolved config has no {s.gym_key!r} entry; "
+                       f"top-level entries: {sorted(graph)}")
+    result = _drive_gym(ctx, s, graph[s.gym_key])
+    result.pop("_state", None)
     return result
 
 
@@ -225,6 +302,160 @@ def execute_warmstart(ctx) -> Dict[str, Any]:
     cfg = dataclasses.replace(ctx.cfg, settings=train)
     result = execute_train(dataclasses.replace(ctx, cfg=cfg))
     result["kind"] = "warmstart"
+    return result
+
+
+# ---------------------------------------------------------------------------
+# sft / dpo — post-training through the same gym loop
+# ---------------------------------------------------------------------------
+def _inject_lora(gym, lora_settings, ctx):
+    """Wrap the resolved gym's model/optimizer for adapter-only training;
+    returns the LoRAModel (or None for full fine-tuning)."""
+    if lora_settings is None:
+        return None
+    import jax
+
+    from ..posttrain import lora as LO
+
+    cfg = LO.LoRAConfig(rank=lora_settings.rank, alpha=lora_settings.alpha,
+                        targets=tuple(lora_settings.targets))
+    gym.model = LO.LoRAModel(gym.model, cfg)
+    gym.optimizer = LO.FrozenBaseOptimizer(gym.optimizer)
+    tr, total = LO.n_trainable(
+        jax.eval_shape(gym.model.init, jax.random.PRNGKey(0)))
+    ctx.log(f"lora: rank {cfg.rank} alpha {cfg.alpha} targets "
+            f"{list(cfg.targets)} — {tr:,} trainable / {total:,} params "
+            f"({100.0 * tr / total:.2f}%)")
+    return gym.model
+
+
+def _save_adapter_artifacts(ctx, s, gym, lora_model, state,
+                            result) -> None:
+    """Adapter-only checkpoint + optional merged export (post-run)."""
+    if lora_model is None:
+        return
+    import jax
+
+    from ..posttrain import lora as LO
+
+    write = ctx.options.get("_write_files", True)
+    adapter_dir = s.adapter_dir or (
+        os.path.join(ctx.cfg.output_dir, "adapter")
+        if ctx.cfg.output_dir else "")
+    if adapter_dir and write:
+        step = int(jax.device_get(state["step"]))
+        path = LO.save_adapter(
+            adapter_dir, step, state["params"],
+            extra={"rank": lora_model.lora.rank,
+                   "alpha": lora_model.lora.alpha,
+                   "targets": list(lora_model.lora.targets),
+                   "fingerprint": gym.run_fingerprint})
+        result["adapter_ckpt"] = path
+        ctx.log(f"adapter checkpoint: {path}")
+    if getattr(s, "export_merged", False) and ctx.cfg.output_dir and write:
+        out = LO.export_merged(lora_model, state["params"],
+                               os.path.join(ctx.cfg.output_dir, "merged"))
+        result["merged_export"] = out
+        ctx.log(f"merged export: {out}")
+
+
+def execute_sft(ctx) -> Dict[str, Any]:
+    """Supervised fine-tuning: the train loop over a loss-masked dataset,
+    optionally with LoRA adapters (frozen base, adapter-only checkpoint,
+    merged deploy export)."""
+    s: SFTSettings = ctx.cfg.settings
+    graph = _resolve_graph(ctx)
+    gym = _graph_get(graph, s.gym_key, "sft")
+    lora_model = _inject_lora(gym, s.lora, ctx)
+    result = _drive_gym(ctx, s, gym)
+    state = result.pop("_state")
+    result["lora"] = (dataclasses.asdict(s.lora)
+                      if s.lora is not None else None)
+    _save_adapter_artifacts(ctx, s, gym, lora_model, state, result)
+    return result
+
+
+def execute_dpo(ctx) -> Dict[str, Any]:
+    """Direct preference optimization: policy vs. frozen reference on
+    chosen/rejected pairs, via :class:`repro.posttrain.dpo.DPOGym`."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..core.gym import Gym
+    from ..posttrain import lora as LO
+    from ..posttrain.dpo import (DPOGym, PreferencePairDataset,
+                                 sample_onpolicy_pairs)
+
+    s: DPOSettings = ctx.cfg.settings
+    graph = _resolve_graph(ctx)
+    base_gym = _graph_get(graph, s.gym_key, "dpo")
+    if not isinstance(base_gym, Gym):
+        raise RunError(f"dpo: graph entry {s.gym_key!r} is not a gym")
+    # rebuild the resolved gym as a DPOGym: same injected components, the
+    # preference step swapped in through the step hooks
+    fields = {f.name: getattr(base_gym, f.name)
+              for f in dataclasses.fields(Gym)}
+    gym = DPOGym(beta=s.beta, **fields)
+    lora_model = _inject_lora(gym, s.lora, ctx)
+
+    def copy_tree(tree):
+        return jax.tree_util.tree_map(lambda x: jnp.array(x, copy=True),
+                                      tree)
+
+    def replace_dataset(loader, dataset):
+        if hasattr(loader, "loader"):  # PrefetchLoader wraps the real one
+            return dataclasses.replace(
+                loader, loader=replace_dataset(loader.loader, dataset))
+        return dataclasses.replace(loader, dataset=dataset)
+
+    def before_run(state, resumed_from):
+        if s.onpolicy is not None:
+            # sample pairs from the (warmstarted/restored) policy through
+            # the serve engine, replacing the graph's dataset
+            op = s.onpolicy
+            if lora_model is not None:
+                sample_model = lora_model.base
+                sample_params = jax.jit(lora_model.merge)(state["params"])
+            else:
+                sample_model, sample_params = gym.model, state["params"]
+            pairs = sample_onpolicy_pairs(
+                sample_model, sample_params, vocab=gym.model.cfg.vocab,
+                n_prompts=op.n_prompts, prompt_len=op.prompt_len,
+                gen_tokens=op.gen_tokens, temperature=op.temperature,
+                top_k=op.top_k, top_p=op.top_p, seed=op.seed,
+                n_slots=op.n_slots, log=ctx.log)
+            seq_len = op.prompt_len + op.gen_tokens - 1
+            dataset = PreferencePairDataset(pairs, seq_len=seq_len,
+                                            seed=op.seed)
+            gym.loader = replace_dataset(gym.loader, dataset)
+            ctx.log(f"dpo: {len(pairs)} on-policy pairs sampled "
+                    f"(seq_len {seq_len})")
+        # the frozen reference: under LoRA it is the zero-adapter base
+        # (reconstructible on resume); full-param DPO copies the freshly
+        # warmstarted params.  Copies, never aliases — the step loop
+        # donates the state buffers.
+        if lora_model is not None:
+            ref = copy_tree(LO.zero_adapters(state["params"]))
+        else:
+            if resumed_from is not None:
+                raise RunError("dpo: cannot resume without lora (the "
+                               "reference params are unrecoverable)")
+            ref = copy_tree(state["params"])
+        gym.ref_params = ref
+        return state
+
+    result = _drive_gym(ctx, s, gym, before_run=before_run)
+    state = result.pop("_state")
+    result["beta"] = s.beta
+    result["lora"] = (dataclasses.asdict(s.lora)
+                      if s.lora is not None else None)
+    hist = result.get("history") or []
+    if hist and "margin" in hist[0]:
+        result["first_margin"] = float(hist[0]["margin"])
+        result["final_margin"] = float(hist[-1]["margin"])
+        result["final_reward_accuracy"] = float(
+            hist[-1].get("reward_accuracy", 0.0))
+    _save_adapter_artifacts(ctx, s, gym, lora_model, state, result)
     return result
 
 
@@ -457,6 +688,8 @@ def register_builtin_kinds() -> None:
     _REGISTERED = True
     register_run_kind("train", TrainSettings, execute_train)
     register_run_kind("warmstart", WarmstartKindSettings, execute_warmstart)
+    register_run_kind("sft", SFTSettings, execute_sft)
+    register_run_kind("dpo", DPOSettings, execute_dpo)
     register_run_kind("bench", BenchSettings, execute_bench)
     register_run_kind("dryrun", DryrunSettings, execute_dryrun)
     register_run_kind("serve", ServeSettings, execute_serve)

@@ -91,6 +91,12 @@ def legacy_dryrun_doc(flat: Dict[str, Any], *, kind: str = "dryrun",
     return {"run": run_sec, **graph}
 
 
+#: train-shaped kinds a sweep base config may declare: they all accept
+#: steps/gym_key/resume and report a loss history, so the gym sweep
+#: backend drives any of them (LoRA-rank x lr ablations run as sft trials)
+TRAIN_LIKE_KINDS = ("train", "sft", "dpo")
+
+
 def legacy_train_doc(raw_graph: Dict[str, Any], *,
                      steps: Optional[int] = None,
                      gym_key: Optional[str] = None,
@@ -98,23 +104,29 @@ def legacy_train_doc(raw_graph: Dict[str, Any], *,
                      name: str = "",
                      output_dir: str = "") -> Dict[str, Any]:
     """Wrap a bare component graph (or re-head an existing run doc) as a
-    train run.  ``None`` settings keep whatever the document already says
-    (so a shim without an explicit flag does not clobber the YAML).
-    ``resume`` accepts the TrainSettings forms: bool or ``"auto"``."""
+    train-shaped run.  A document that already declares a train-like kind
+    (``train``/``sft``/``dpo``) keeps it — its settings section gets the
+    step/resume patches; anything else becomes a plain ``train`` run.
+    ``None`` settings keep whatever the document already says (so a shim
+    without an explicit flag does not clobber the YAML).  ``resume``
+    accepts the TrainSettings forms: bool or ``"auto"``."""
     doc = copy.deepcopy(raw_graph)
     run_sec = dict(doc.pop("run", {}) or {})
-    settings = dict(run_sec.get("train", {}) or {})
+    kind = run_sec.get("kind")
+    if kind not in TRAIN_LIKE_KINDS:
+        kind = "train"
+    settings = dict(run_sec.get(kind, {}) or {})
     if steps is not None:
         settings["steps"] = int(steps)
     if gym_key is not None:
         settings["gym_key"] = gym_key
     if resume is not None:
         settings["resume"] = resume if isinstance(resume, str) else bool(resume)
-    run_sec["kind"] = "train"
-    run_sec["train"] = settings
+    run_sec["kind"] = kind
+    run_sec[kind] = settings
     from .config import SETTINGS_SCHEMAS
 
-    for other in set(SETTINGS_SCHEMAS) - {"train"}:  # drop foreign sections
+    for other in set(SETTINGS_SCHEMAS) - {kind}:  # drop foreign sections
         run_sec.pop(other, None)
     if name:
         run_sec["name"] = name

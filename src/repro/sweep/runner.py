@@ -75,7 +75,8 @@ def _gym_backend(spec: SweepSpec) -> Callable[..., Dict[str, Any]]:
         out = {
             key: result[key]
             for key in ("final_loss", "first_loss", "tokens_per_s", "steps",
-                        "wall_s")
+                        "wall_s", "final_margin", "first_margin",
+                        "final_reward_accuracy")
             if key in result
         }
         if result.get("resumed_from") is not None:

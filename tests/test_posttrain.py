@@ -1,0 +1,454 @@
+"""Post-training subsystem: LoRA adapters, loss-masked SFT, and DPO.
+
+The load-bearing invariants:
+
+- injecting adapters is an exact no-op at init (``b = 0``), and the merged
+  export is BITWISE the adapter forward — deploy artifacts cannot drift;
+- the frozen base never moves during SFT/DPO (AdamW weight decay included),
+  so any SFT run's base leaves stay bitwise equal to the warmstart donor;
+- ``loss_mask`` batches ride the vectorized loader path as dicts;
+- the ``sft``/``dpo`` run kinds are full Run-API citizens: resumable
+  (step-for-step identical curves), sweepable, replayable.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.components  # noqa: F401
+import repro.run.kinds  # noqa: F401
+from repro.configs import get_reduced
+from repro.data.packed_dataset import (
+    ChunkedLMDataset,
+    PackedDataset,
+    ShardedLoader,
+    _vectorized_dataset,
+    synthetic_dataset,
+)
+from repro.data.prefetch import PrefetchLoader
+from repro.models import build_model
+from repro.posttrain import lora as LO
+from repro.posttrain.dpo import (
+    PreferencePairDataset,
+    synthetic_preference_pairs,
+)
+from repro.posttrain.sft import PackedSFTDataset, synthetic_sft_examples
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.fixture(scope="module")
+def base_model():
+    return build_model(get_reduced("qwen1p5_0p5b"))
+
+
+def _tokens(model, b=2, s=12, seed=3):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, model.cfg.vocab, (b, s)), jnp.int32)
+
+
+def _perturbed(lm, rng_seed=1):
+    """LoRA params with non-zero ``b`` factors (so adapters matter)."""
+    params = lm.init(jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree_util.tree_flatten(params[LO.ADAPTER_KEY])
+    key = jax.random.PRNGKey(rng_seed)
+    leaves = [l + 0.02 * jax.random.normal(jax.random.fold_in(key, i),
+                                           l.shape, l.dtype)
+              for i, l in enumerate(leaves)]
+    params[LO.ADAPTER_KEY] = jax.tree_util.tree_unflatten(treedef, leaves)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# LoRA algebra
+# ---------------------------------------------------------------------------
+def test_lora_injection_is_exact_noop(base_model):
+    """b = 0 at init: the wrapped forward is BITWISE the base forward."""
+    lm = LO.LoRAModel(base_model, LO.LoRAConfig(rank=4))
+    params = lm.init(jax.random.PRNGKey(0))
+    assert LO.ADAPTER_KEY in params
+    toks = _tokens(base_model)
+    base_params = {k: v for k, v in params.items() if k != LO.ADAPTER_KEY}
+    want, _ = base_model.apply(base_params, {"tokens": toks})
+    got, _ = lm.apply(params, {"tokens": toks})
+    assert jnp.all(want == got)
+    tr, total = LO.n_trainable(params)
+    assert 0 < tr < total
+
+
+def test_lora_merge_matches_adapter_forward_bitwise(base_model):
+    """forward(merge(params)) == merged-on-the-fly forward, bitwise — the
+    contraction is pinned to HIGHEST precision on both paths."""
+    lm = LO.LoRAModel(base_model, LO.LoRAConfig(rank=4))
+    params = _perturbed(lm)
+    toks = _tokens(base_model)
+    merged = lm.merge(params)
+    assert LO.ADAPTER_KEY not in merged
+    want, _ = base_model.apply(merged, {"tokens": toks})
+    got, _ = lm.apply(params, {"tokens": toks})
+    assert jnp.all(want == got)
+    # ... and the adapters actually do something
+    base_params = {k: v for k, v in params.items() if k != LO.ADAPTER_KEY}
+    plain, _ = base_model.apply(base_params, {"tokens": toks})
+    assert not jnp.all(plain == got)
+
+
+def test_lora_adapter_ckpt_roundtrip(tmp_path, base_model):
+    """save_adapter -> load_adapter into a same-base tree reproduces the
+    adapter forward bitwise; export_merged writes the flat deploy file."""
+    lm = LO.LoRAModel(base_model, LO.LoRAConfig(rank=4))
+    params = _perturbed(lm)
+    d = str(tmp_path / "adapter")
+    LO.save_adapter(d, 7, params, extra={"rank": 4})
+    restored = LO.load_adapter(lm.init(jax.random.PRNGKey(0)), d)
+    toks = _tokens(base_model)
+    want, _ = lm.apply(params, {"tokens": toks})
+    got, _ = lm.apply(restored, {"tokens": toks})
+    assert jnp.all(want == got)
+
+    out = LO.export_merged(lm, params, str(tmp_path / "merged"))
+    assert os.path.exists(out)
+
+
+def test_lora_merge_bitwise_under_sharded_plan(base_model):
+    """The adapter tree flows through a sharding plan (B.LORA axis) and the
+    bitwise merge contract holds for plan-laid-out params."""
+    from repro.core.gym import Gym
+    from repro.launch import mesh as MESH
+    from repro.sharding.plans import make_plan
+
+    lm = LO.LoRAModel(base_model, LO.LoRAConfig(rank=4))
+    ds = PackedSFTDataset(synthetic_sft_examples(64, base_model.cfg.vocab),
+                          seq_len=16)
+    from repro.optim.adamw import AdamW
+
+    gym = Gym(model=lm,
+              optimizer=LO.FrozenBaseOptimizer(AdamW(lr=1e-3)),
+              loader=ShardedLoader(ds, 4),
+              mesh=MESH.SingleDeviceMesh().build(),
+              plan=make_plan("fsdp"), log_every=1, prefetch=0)
+    out = gym.run(steps=2)
+    assert out["history"][-1]["loss"] > 0
+    params = jax.device_get(out["state"]["params"])
+    toks = _tokens(base_model)
+    want, _ = base_model.apply(lm.merge(params), {"tokens": toks})
+    got, _ = lm.apply(params, {"tokens": toks})
+    assert jnp.all(np.asarray(want) == np.asarray(got))
+
+
+def test_frozen_base_optimizer_pins_base(base_model):
+    """Weight decay moves every matrix leaf in plain AdamW — the wrapper
+    must keep frozen params (and f32 masters) bitwise still."""
+    from repro.ckpt.format import flatten_with_paths
+    from repro.optim.adamw import AdamW
+
+    lm = LO.LoRAModel(base_model, LO.LoRAConfig(rank=4))
+    params = lm.init(jax.random.PRNGKey(0))
+    opt = LO.FrozenBaseOptimizer(AdamW(lr=1e-2, weight_decay=0.1))
+    state = opt.init(params)
+    grads = jax.tree_util.tree_map(jnp.ones_like, params)
+    new_params, _ = opt.update(grads, state, params)
+    for path, leaf in flatten_with_paths(new_params):
+        old = params
+        for part in path.split("/"):
+            old = old[part]
+        if LO.is_adapter_path(path):
+            assert not np.array_equal(np.asarray(leaf), np.asarray(old)), path
+        else:
+            assert np.array_equal(np.asarray(leaf), np.asarray(old)), path
+
+
+# ---------------------------------------------------------------------------
+# vectorized-dataset contract (satellite: subclass overrides)
+# ---------------------------------------------------------------------------
+def test_vectorized_contract_subclass_overriding_sample_batch(tmp_path):
+    """A ChunkedLMDataset subclass overriding ONLY sample_batch gets the
+    fast path with ITS override; one overriding only sample() falls back;
+    an explicit ``vectorized`` attribute wins over both."""
+    prefix = str(tmp_path / "toks")
+    synthetic_dataset(4000, 64, prefix)
+
+    class BatchOverride(ChunkedLMDataset):
+        calls = 0
+
+        def sample_batch(self, idxs):
+            BatchOverride.calls += 1
+            return super().sample_batch(idxs)
+
+    class SampleOverride(ChunkedLMDataset):
+        def sample(self, i):
+            return tuple(np.asarray(x) * 0 for x in super().sample(i))
+
+    class OptOut(ChunkedLMDataset):
+        vectorized = False
+
+    bo = BatchOverride(PackedDataset(prefix), 16)
+    assert _vectorized_dataset(bo)
+    next(ShardedLoader(bo, 2).batches(1))
+    assert BatchOverride.calls == 1, "override was bypassed"
+
+    so = SampleOverride(PackedDataset(prefix), 16)
+    assert not _vectorized_dataset(so)
+    batch = next(ShardedLoader(so, 2).batches(1))
+    assert int(batch["tokens"].sum()) == 0, "sample() override was bypassed"
+
+    assert not _vectorized_dataset(OptOut(PackedDataset(prefix), 16))
+    assert _vectorized_dataset(ChunkedLMDataset(PackedDataset(prefix), 16))
+
+
+def test_loss_mask_batches_ride_the_loader(base_model):
+    """Dict batches (with loss_mask) flow through ShardedLoader AND
+    PrefetchLoader unchanged; indices wrap modulo the dataset."""
+    ds = PackedSFTDataset(synthetic_sft_examples(8, 64, seed=1), seq_len=16,
+                          shuffle=False)
+    loader = ShardedLoader(ds, 4)
+    batches = list(PrefetchLoader(loader, depth=2, to_device=False)
+                   .batches(3, start_step=0))
+    assert len(batches) == 3
+    for b in batches:
+        assert set(b) == {"tokens", "labels", "loss_mask"}
+        assert b["loss_mask"].dtype == np.float32
+        assert b["tokens"].shape == b["loss_mask"].shape == (4, 16)
+        assert 0 < b["loss_mask"].sum() <= b["loss_mask"].size
+    # wrap-around: step far past the dataset end still yields rows
+    far = next(iter(loader.batches(1, start_step=10_000)))
+    assert far["tokens"].shape == (4, 16)
+
+
+def test_sft_mask_marks_responses_not_prompts():
+    """Unpacked layout: mask is 0 on prompt/pad label positions, 1 on
+    response positions (shifted against labels)."""
+    prompt = np.asarray([5, 6, 7], np.int32)
+    response = np.asarray([10, 11], np.int32)
+    ds = PackedSFTDataset([(prompt, response)], seq_len=8, pack=False,
+                          shuffle=False, pad_id=0)
+    b = ds.sample_batch(np.asarray([0]))
+    # row: [5 6 7 10 11 0 0 0 0]; labels drop position 0
+    assert b["tokens"][0].tolist() == [5, 6, 7, 10, 11, 0, 0, 0]
+    assert b["labels"][0].tolist() == [6, 7, 10, 11, 0, 0, 0, 0]
+    assert b["loss_mask"][0].tolist() == [0, 0, 1, 1, 0, 0, 0, 0]
+
+
+def test_preference_pairs_are_padded_dicts():
+    ds = PreferencePairDataset(synthetic_preference_pairs(6, 64), seq_len=24,
+                               shuffle=False)
+    b = ds.sample_batch(np.arange(3))
+    from repro.posttrain.dpo import PREF_KEYS
+
+    assert set(b) == set(PREF_KEYS)
+    assert b["chosen_tokens"].shape == (3, 24)
+    assert b["chosen_mask"].dtype == np.float32
+    assert b["chosen_mask"].sum() > 0 and b["rejected_mask"].sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# run kinds: sft / dpo through the Run API
+# ---------------------------------------------------------------------------
+def _sft_doc(tmp_path, name, steps, *, dataset=None, warmstart=None,
+             lora=None, resume=None, ckpt_every=0, seq_len=24, **sft):
+    settings = {"steps": steps, **sft}
+    if warmstart is not None:
+        settings["warmstart"] = warmstart
+    if lora is not None:
+        settings["lora"] = lora
+    if resume is not None:
+        settings["resume"] = resume
+    gym_cfg = {"model": {"instance_key": "model"},
+               "optimizer": {"instance_key": "optimizer"},
+               "loader": {"instance_key": "loader"},
+               "log_every": 1, "prefetch": 0}
+    if ckpt_every:
+        gym_cfg["ckpt_every"] = ckpt_every
+    return {
+        "run": {"kind": "sft", "name": name,
+                "output_dir": str(tmp_path / name), "sft": settings},
+        "arch": {"component_key": "arch_config", "variant_key": "qwen1p5_0p5b",
+                 "config": {"reduced": True}},
+        "model": {"component_key": "model", "variant_key": "auto",
+                  "config": {"arch_config": {"instance_key": "arch"}}},
+        "optimizer": {"component_key": "optimizer", "variant_key": "adamw",
+                      "config": {"lr": 0.002, "weight_decay": 0.0}},
+        "dataset": dataset or {
+            "component_key": "dataset", "variant_key": "sft_synthetic",
+            "config": {"seq_len": seq_len, "vocab": 512, "n_examples": 64,
+                       "seed": 0}},
+        "loader": {"component_key": "loader", "variant_key": "sharded",
+                   "config": {"dataset": {"instance_key": "dataset"},
+                              "global_batch": 4}},
+        "gym": {"component_key": "gym", "variant_key": "standard",
+                "config": gym_cfg},
+    }
+
+
+def _train_donor(tmp_path, name="donor", steps=4):
+    from repro.run import api
+
+    doc = _sft_doc(tmp_path, name, steps, ckpt_every=steps)
+    doc["run"]["kind"] = "train"
+    doc["run"]["train"] = {"steps": steps}
+    del doc["run"]["sft"]
+    api.execute_doc(doc)
+    return str(tmp_path / name / "ckpt")
+
+
+def test_sft_warmstart_keeps_base_bitwise(tmp_path):
+    """Strict warmstart from an adapter-less donor succeeds (fresh adapter
+    leaves are exempt), and after training the sft run's checkpointed BASE
+    leaves are bitwise the donor's — frozen means frozen."""
+    from repro.ckpt import elastic as EL
+    from repro.ckpt.format import latest_checkpoint, read_leaf, read_manifest
+    from repro.run import api
+
+    src = _train_donor(tmp_path)
+    doc = _sft_doc(tmp_path, "sft", 4, lora={"rank": 4},
+                   warmstart={"source": src, "strict": True}, ckpt_every=4)
+    res = api.execute_doc(doc)
+    assert res["adapter_ckpt"]
+    assert res["lora"]["rank"] == 4
+    assert res["history"][-1]["loss"] > 0
+
+    def _leaves(ckpt):
+        _, d = latest_checkpoint(ckpt)
+        return {k: read_leaf(d, e)
+                for k, e in read_manifest(d)["leaves"].items()}
+
+    donor = _leaves(src)
+    sft = _leaves(str(tmp_path / "sft" / "ckpt"))
+    checked = 0
+    for key, val in sft.items():
+        if not key.startswith("params/") or LO.is_adapter_path(
+                key.split("/", 1)[1]):
+            continue
+        assert np.array_equal(val, donor[key]), f"{key} drifted"
+        checked += 1
+    assert checked > 3
+    # the donor really has no adapter leaves (the exemption was exercised)
+    assert not any(LO.is_adapter_path(k.split("/", 1)[1])
+                   for k in EL.manifest_keys(src) if k.startswith("params/"))
+
+
+def test_sft_resume_matches_straight(tmp_path):
+    """Interrupt-and-resume reproduces the uninterrupted loss curve
+    step-for-step (params + moments + data order all restored)."""
+    from repro.run import api
+
+    straight = api.execute_doc(
+        _sft_doc(tmp_path, "straight", 6, lora={"rank": 4}, ckpt_every=2))
+    api.execute_doc(
+        _sft_doc(tmp_path, "resumed", 3, lora={"rank": 4}, ckpt_every=3))
+    resumed = api.execute_doc(
+        _sft_doc(tmp_path, "resumed", 6, lora={"rank": 4}, ckpt_every=3,
+                 resume="auto"))
+    assert resumed["resumed_from"] == 3
+    want = {m["step"]: m["loss"] for m in straight["history"]}
+    got = {m["step"]: m["loss"] for m in resumed["history"]}
+    for step in got:
+        assert abs(want[step] - got[step]) < 1e-6, step
+    assert max(got) == 6
+
+
+def test_sft_masked_loss_decreases(tmp_path):
+    """The synthetic responses are learnable: 12 steps visibly reduce the
+    masked loss (prompts stay noise)."""
+    from repro.run import api
+
+    res = api.execute_doc(_sft_doc(tmp_path, "learn", 12, lora={"rank": 8}))
+    assert res["final_loss"] < res["first_loss"] - 0.05
+
+
+def test_sft_full_parameter_mode(tmp_path):
+    """No ``lora`` block: plain full-parameter finetuning, no adapter
+    artifacts."""
+    from repro.run import api
+
+    res = api.execute_doc(_sft_doc(tmp_path, "fullft", 2))
+    assert res["lora"] is None
+    assert "adapter_ckpt" not in res
+
+
+def _dpo_doc(tmp_path, name, steps, *, lora=None, beta=0.1, onpolicy=None,
+             resume=None, ckpt_every=0, seq_len=24):
+    doc = _sft_doc(tmp_path, name, steps, dataset={
+        "component_key": "dataset", "variant_key": "preference_synthetic",
+        "config": {"seq_len": seq_len, "vocab": 512, "n_pairs": 48,
+                   "seed": 0}},
+        lora=lora, resume=resume, ckpt_every=ckpt_every)
+    settings = doc["run"].pop("sft")
+    settings["beta"] = beta
+    if onpolicy is not None:
+        settings["onpolicy"] = onpolicy
+    doc["run"]["kind"] = "dpo"
+    doc["run"]["dpo"] = settings
+    return doc
+
+
+def test_dpo_margin_increases(tmp_path):
+    """Implicit-reward margins rise on the synthetic preference set, and
+    the first loss is exactly log 2 (policy == reference at init under
+    LoRA, since b = 0).  Ten steps at batch 8 wrap the 64-pair set once,
+    so the final steps revisit seen pairs — margins there must be decisively
+    positive."""
+    from repro.run import api
+
+    doc = _dpo_doc(tmp_path, "dpo", 10, lora={"rank": 8}, seq_len=32)
+    doc["optimizer"]["config"]["lr"] = 0.001
+    doc["loader"]["config"]["global_batch"] = 8
+    doc["dataset"]["config"]["n_pairs"] = 64
+    res = api.execute_doc(doc)
+    assert abs(res["history"][0]["loss"] - float(np.log(2))) < 1e-4
+    assert res["first_margin"] == pytest.approx(0.0, abs=1e-5)
+    assert res["final_margin"] > 0.5
+    assert res["final_reward_accuracy"] >= 0.75
+    assert res["adapter_ckpt"]
+
+
+def test_dpo_onpolicy_sampling(tmp_path):
+    """On-policy mode samples its pairs through the serve engine and still
+    trains (margins move off zero)."""
+    from repro.run import api
+
+    res = api.execute_doc(_dpo_doc(
+        tmp_path, "dpo_op", 3, lora={"rank": 4},
+        onpolicy={"n_prompts": 4, "prompt_len": 8, "gen_tokens": 8,
+                  "temperature": 0.9, "n_slots": 4}))
+    assert res["final_margin"] != res["first_margin"]
+
+
+def test_dpo_full_param_resume_rejected(tmp_path):
+    """Full-parameter DPO cannot resume (the frozen reference is only
+    reconstructible as the zero-adapter base) — a config error, not a
+    silent wrong-reference run."""
+    from repro.run.config import RunError, parse_run_doc
+
+    doc = _dpo_doc(tmp_path, "bad", 2, resume="auto")
+    with pytest.raises(RunError, match="lora"):
+        parse_run_doc(doc, kind="dpo")
+
+
+# ---------------------------------------------------------------------------
+# sweeps over post-training kinds
+# ---------------------------------------------------------------------------
+def test_sweep_drives_sft_trials(tmp_path):
+    """A sweep whose base document declares ``kind: sft`` runs sft trials
+    (kind-preserving legacy_train_doc) and reports their losses."""
+    from repro.sweep.runner import SweepRunner
+    from repro.sweep.spec import SweepSpec
+
+    base = _sft_doc(tmp_path, "sweepbase", 2, lora={"rank": 4})
+    base["run"].pop("output_dir")
+    spec = SweepSpec.from_dict({
+        "name": "lora-rank", "backend": "gym", "steps": 2,
+        "base": base, "output_dir": str(tmp_path / "sweep"),
+        "axes": [{"type": "grid",
+                  "parameters": {"run.sft.lora.rank": [2, 4]}}],
+    })
+    records = SweepRunner(spec).run()
+    assert [r["status"] for r in records] == ["ok", "ok"]
+    for r in records:
+        assert r["metrics"]["final_loss"] > 0
+    with open(tmp_path / "sweep" / "trials" / records[0]["trial_id"] /
+              "result.json") as f:
+        assert json.load(f)["kind"] == "sft"

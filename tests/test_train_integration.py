@@ -1,5 +1,10 @@
-"""Integration: the shipped quickstart YAML resolves and trains end to end."""
+"""Integration: the shipped quickstart YAML resolves and trains end to end,
+and the loss path honors per-token loss masks (the SFT contract)."""
 import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 import repro.core.components  # noqa: F401
 from repro.config.resolver import load_yaml, resolve_config
@@ -50,3 +55,60 @@ def test_eval_hook_fires():
     assert seen, "eval hook never fired"
     ev = graph["evaluator"](gym.model, out["state"]["params"])
     assert ev["ppl"] > 1.0
+
+
+# ---------------------------------------------------------------------------
+# loss-mask correctness: the contract SFT prompt-masking builds on
+# ---------------------------------------------------------------------------
+def _loss_fixture():
+    """(model, params, tokens, labels) on the quickstart graph."""
+    raw = load_yaml(os.path.join(ROOT, "examples", "configs",
+                                 "quickstart.yaml"))
+    graph = resolve_config(raw)
+    model = graph["model"]
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    toks = rng.integers(0, model.cfg.vocab, (2, 17)).astype(np.int32)
+    return model, params, jnp.asarray(toks[:, :-1]), jnp.asarray(toks[:, 1:])
+
+
+def test_all_ones_loss_mask_is_identity():
+    """A loss_mask of all ones is BITWISE the unmasked loss: masking must
+    not perturb existing pretraining numerics when the key is present."""
+    from repro.train.steps import compute_loss
+
+    model, params, tokens, labels = _loss_fixture()
+    plain, _ = compute_loss(model, params,
+                            {"tokens": tokens, "labels": labels})
+    ones = jnp.ones(labels.shape, jnp.float32)
+    masked, _ = compute_loss(model, params,
+                             {"tokens": tokens, "labels": labels,
+                              "loss_mask": ones})
+    assert plain.dtype == masked.dtype == jnp.float32
+    assert jnp.all(plain == masked), (float(plain), float(masked))
+
+
+def test_prompt_mask_matches_hand_computed_mean():
+    """A prompt-masked batch loss equals the hand-computed mean NLL over
+    ONLY the unmasked (response) positions."""
+    from repro.train.steps import compute_loss
+
+    model, params, tokens, labels = _loss_fixture()
+    mask = np.ones(labels.shape, np.float32)
+    mask[0, :5] = 0.0          # row 0: 5 prompt positions
+    mask[1, :9] = 0.0          # row 1: a longer prompt
+    mask[1, -2:] = 0.0         # ... and trailing padding
+    loss, _ = compute_loss(model, params,
+                           {"tokens": tokens, "labels": labels,
+                            "loss_mask": jnp.asarray(mask)})
+
+    logits, _ = model.apply(params, {"tokens": tokens})
+    lf = np.asarray(logits, np.float64)
+    logz = np.log(np.sum(np.exp(lf - lf.max(-1, keepdims=True)), -1)) \
+        + lf.max(-1, keepdims=True)[..., 0]
+    gold = np.take_along_axis(lf, np.asarray(labels)[..., None], -1)[..., 0]
+    nll = logz - gold
+    want = float((nll * mask).sum() / mask.sum())
+    assert abs(float(loss) - want) < 1e-4, (float(loss), want)
+    # and the mask actually changed the answer vs. the unmasked mean
+    assert abs(want - float(nll.mean())) > 1e-6
