@@ -12,7 +12,15 @@ invalidated by the very next step without racing the writer.
 Commits are atomic (tmp dir + rename, see :mod:`.format`); a
 :class:`RetentionPolicy` prunes committed checkpoints after each save.
 Worker failures are re-raised on the next ``save``/``wait`` call — a
-checkpoint that silently failed to commit must not look like progress.
+checkpoint that silently failed to commit must not look like progress —
+and raising *clears* the latched errors: the checkpointer stays usable
+(worker thread alive, queue drained), so a caller that survives one bad
+save can keep checkpointing.  With a ``retry`` policy
+(:class:`repro.resilience.retry.RetryPolicy`) transient write failures
+are absorbed on the writer thread before they ever latch; ``retry_count``
+tracks how many attempts were re-tried.  A ``fault_injector``
+(:class:`repro.resilience.faults.FaultInjector`) raises scheduled
+``ckpt_io`` OSErrors inside the write for chaos tests.
 """
 from __future__ import annotations
 
@@ -59,12 +67,20 @@ class AsyncCheckpointer:
     ckpt_dir: str
     retention: RetentionPolicy = dataclasses.field(default_factory=RetentionPolicy)
     background: bool = True
+    retry: Any = None                 # Optional[resilience.RetryPolicy]
+    fault_injector: Any = None        # Optional[resilience.FaultInjector]
 
     def __post_init__(self):
         self._q: "queue.Queue" = queue.Queue(maxsize=2)
         self._worker: Optional[threading.Thread] = None
         self._errors: list = []
         self._lock = threading.Lock()
+        self._retries = 0
+
+    @property
+    def retry_count(self) -> int:
+        """How many write attempts were absorbed by the retry policy."""
+        return self._retries
 
     # -- snapshot (caller thread, hot path) ---------------------------------
     @staticmethod
@@ -118,7 +134,23 @@ class AsyncCheckpointer:
                 self._q.task_done()
 
     def _write(self, step: int, arrays, specs, extra):
-        F.write_checkpoint(self.ckpt_dir, step, arrays, specs, extra)
+        def attempt():
+            if self.fault_injector is not None:
+                spec = self.fault_injector.fire("ckpt_io")
+                if spec is not None:
+                    raise OSError(f"injected ckpt_io fault "
+                                  f"(step {step}, firing {spec._fired})")
+            F.write_checkpoint(self.ckpt_dir, step, arrays, specs, extra)
+
+        if self.retry is None:
+            attempt()
+        else:
+            from ..resilience.retry import call_with_retry
+
+            def count(attempt_n, exc):
+                self._retries += 1
+
+            call_with_retry(attempt, policy=self.retry, on_retry=count)
         self.prune()
 
     # -- lifecycle ----------------------------------------------------------
@@ -129,9 +161,19 @@ class AsyncCheckpointer:
         self.check()
 
     def check(self) -> None:
-        """Surface any background write failure on the caller's thread."""
+        """Surface any background write failure on the caller's thread.
+
+        Raising CLEARS the latch: the worker thread is still alive and the
+        queue drained, so after handling the error the checkpointer is
+        reusable — a later successful save must not re-raise a stale
+        failure (one raise per failure burst, the first error of it)."""
         if self._errors:
-            raise self._errors.pop(0)
+            first, rest = self._errors[0], self._errors[1:]
+            self._errors.clear()
+            if rest:
+                first.__notes__ = getattr(first, "__notes__", []) + [
+                    f"(+{len(rest)} further queued save failure(s) cleared)"]
+            raise first
 
     def close(self) -> None:
         """Drain, stop the writer thread, then surface any failure — the

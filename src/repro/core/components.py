@@ -158,6 +158,13 @@ def register_all() -> None:
                            background=False),
          IF.CheckpointerIF)
 
+    # -- resilience (repro.resilience) -------------------------------------
+    from ..resilience import FaultInjector
+
+    _reg("fault_injector", "schedule",
+         lambda faults=(): FaultInjector.from_config(faults),
+         FaultInjector)
+
     # -- trackers ---------------------------------------------------------------
     _reg("tracker", "stdout", lambda prefix="": _StdoutTracker(prefix),
          IF.TrackerIF)

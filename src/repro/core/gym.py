@@ -11,11 +11,21 @@ the plan), metrics stay on device between log points — one
 fetch never blocks dispatch of the current step — and checkpoints route
 through the async engine (:mod:`repro.ckpt`): the loop pays only for the
 overlapped device->host snapshot, serialization happens on a writer
-thread."""
+thread.
+
+Resilience (:mod:`repro.resilience`, all optional): a ``sentinel``
+inspects every flushed metric point and an anomaly rolls the run back to
+the newest committed checkpoint strictly *before* the anomaly step
+(metrics flush one window late, so the latest checkpoint may already
+hold corrupted state); a ``preempt_guard`` turns SIGTERM into one final
+synchronous checkpoint and a resumable exit; a ``fault_injector``
+schedules deterministic failures through the same paths the real ones
+take."""
 from __future__ import annotations
 
 import dataclasses
 import os
+import shutil
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -45,6 +55,13 @@ class Gym:
     prefetch: int = 2                     # device-prefetch depth (0 = sync)
     eval_fn: Optional[Callable] = None
     logger: Optional[Callable[[Dict[str, Any]], None]] = None
+    # -- resilience (see repro.resilience; all optional) -------------------
+    sentinel: Any = None                  # StepSentinel: anomaly detection
+    preempt_guard: Any = None             # PreemptionGuard: graceful SIGTERM
+    fault_injector: Any = None            # FaultInjector: scheduled chaos
+    max_rollbacks: int = 3                # anomaly rollbacks before fatal
+    skip_window: bool = False             # skip the anomalous data window
+    ckpt_retry: Any = None                # RetryPolicy for checkpoint IO
 
     def setup(self):
         if self.mesh is not None and self.plan is not None:
@@ -65,25 +82,31 @@ class Gym:
                              in_shardings=(state_sh, None) + extra_sh,
                              out_shardings=(state_sh, None),
                              donate_argnums=(0,))
-            with self.mesh:
-                state = jax.jit(
-                    lambda r: ST.init_train_state(self.model, self.optimizer, r),
-                    out_shardings=state_sh,
-                )(jax.random.PRNGKey(self.seed))
         else:
             self.shard_warnings = []
             self._state_sh = None
             jitted = jax.jit(step_fn, donate_argnums=(0,))
-            state = ST.init_train_state(
-                self.model, self.optimizer, jax.random.PRNGKey(self.seed)
-            )
         self._jit_step = jitted
         # extra step inputs (e.g. a DPO reference-params tree) are traced
         # arguments, NOT jit-closure constants: closing over them would bake
         # device buffers into the executable and double the weight memory
         self._step = lambda s, b: self._jit_step(s, b,
                                                  *self._step_extra_args())
-        return state
+        return self._init_state()
+
+    def _init_state(self):
+        """A fresh seed-initialized train state in this gym's layout — also
+        the rollback fallback when no usable checkpoint predates an
+        anomaly.  Requires :meth:`setup` to have run (shardings cached)."""
+        key = jax.random.PRNGKey(self.seed)
+        if self.mesh is not None:
+            with self.mesh:
+                return jax.jit(
+                    lambda r: ST.init_train_state(self.model,
+                                                  self.optimizer, r),
+                    out_shardings=self._state_sh,
+                )(key)
+        return ST.init_train_state(self.model, self.optimizer, key)
 
     # -- subclass hooks ----------------------------------------------------
     # A Gym variant (e.g. the DPO gym) changes WHAT a step computes by
@@ -108,14 +131,23 @@ class Gym:
     def _ckpt(self):
         """The checkpointer this gym saves/restores through: the injected
         registry component, or a default async engine on ``ckpt_dir``."""
-        if self.checkpointer is not None:
-            return self.checkpointer
-        if not self.ckpt_dir:
-            return None
-        from ..ckpt import AsyncCheckpointer
+        ck = self.checkpointer
+        if ck is None:
+            if not self.ckpt_dir:
+                return None
+            from ..ckpt import AsyncCheckpointer
 
-        self.checkpointer = AsyncCheckpointer(self.ckpt_dir)
-        return self.checkpointer
+            ck = self.checkpointer = AsyncCheckpointer(self.ckpt_dir)
+        # resilience knobs ride on the gym config; stamp them onto the
+        # engine (injected registry checkpointers keep their own settings)
+        if self.ckpt_retry is not None and hasattr(ck, "retry") \
+                and ck.retry is None:
+            ck.retry = self.ckpt_retry
+        if self.fault_injector is not None \
+                and hasattr(ck, "fault_injector") \
+                and ck.fault_injector is None:
+            ck.fault_injector = self.fault_injector
+        return ck
 
     def save_policy(self, step: int) -> bool:
         """Does this step checkpoint? The ``ckpt_every`` knob (override for
@@ -200,25 +232,28 @@ class Gym:
 
     # -- training ----------------------------------------------------------
     def run(self, steps: int, state=None) -> Dict[str, Any]:
+        """Train for ``steps`` steps.  Besides ``state`` and ``history`` the
+        result carries the resilience record: ``events`` (anomaly /
+        rollback / preempt / fault rows), ``rollbacks`` and ``preempted``
+        — all empty/zero/False on a plain clean run."""
         if state is None:
             state = self.setup()
         start = int(state["step"])
+        target = start + steps
         history: List[Dict[str, Any]] = []
+        events: List[Dict[str, Any]] = []
+        rollbacks = 0
+        preempted = False
+        data_offset = 0  # grows when skip_window drops anomalous batches
         t0 = time.time()
-        pending: List[tuple] = []  # (step, device metrics, wall_s at dispatch)
+        inj = self.fault_injector
+        guard = self.preempt_guard
+        if guard is None and inj is not None and inj.pending("preempt"):
+            # an injected preemption needs a flag holder even when no real
+            # signal handler was wired; same polling path as the real thing
+            from ..resilience.preempt import PreemptionGuard
 
-        def flush():
-            if not pending:
-                return
-            fetched = jax.device_get([m for _, m, _ in pending])
-            for (step, _, wall), vals in zip(pending, fetched):
-                m = {k: float(v) for k, v in vals.items()}
-                m["step"] = step
-                m["wall_s"] = wall
-                history.append(m)
-                if self.logger:
-                    self.logger(m)
-            pending.clear()
+            guard = PreemptionGuard()
 
         # the checkpointer is consulted through save_policy (not ckpt_every
         # directly) so a subclass can implement its own cadence
@@ -226,27 +261,96 @@ class Gym:
         ctx = self.mesh if self.mesh is not None else _nullctx()
         try:
             with ctx:
-                loader = self._wrapped_loader()
-                for i, batch in enumerate(loader.batches(steps, start_step=start)):
-                    state, metrics = self._step(state, batch)
-                    step = start + i + 1
-                    if self.log_every and (step % self.log_every == 0 or i == 0):
-                        # fetch the PREVIOUS window now (long since computed —
-                        # a cheap transfer), stash the current one: dispatch of
-                        # the next step is never blocked on this step's metrics
+                while True:
+                    current = int(jax.device_get(state["step"]))
+                    if target - current <= 0:
+                        break
+                    pending: List[tuple] = []  # (step, device metrics, wall_s)
+
+                    def flush(pending=pending):
+                        if not pending:
+                            return
+                        fetched = jax.device_get([m for _, m, _ in pending])
+                        rows = list(zip(list(pending), fetched))
+                        pending.clear()
+                        for (step, _, wall), vals in rows:
+                            m = {k: float(v) for k, v in vals.items()}
+                            if inj is not None and \
+                                    inj.fire("nan_loss", step) is not None:
+                                m["loss"] = float("nan")
+                            m["step"] = step
+                            m["wall_s"] = wall
+                            if self.sentinel is not None:
+                                anomaly = self.sentinel.check(step, m)
+                                if anomaly is not None:
+                                    raise _Rollback(anomaly)
+                            history.append(m)
+                            if self.logger:
+                                self.logger(m)
+
+                    loader = self._wrapped_loader()
+                    batches = loader.batches(target - current,
+                                             start_step=current + data_offset)
+                    stop_step = 0
+                    try:
+                        for i, batch in enumerate(batches):
+                            step = current + i + 1
+                            if inj is not None and \
+                                    inj.fire("nan_params", step) is not None:
+                                state = inj.corrupt_params(state)
+                            state, metrics = self._step(state, batch)
+                            if self.log_every and (step % self.log_every == 0
+                                                   or step == start + 1):
+                                # fetch the PREVIOUS window now (long since
+                                # computed — a cheap transfer), stash the
+                                # current one: dispatch of the next step is
+                                # never blocked on this step's metrics
+                                flush()
+                                pending.append((step, metrics,
+                                                round(time.time() - t0, 2)))
+                            if self.eval_every and self.eval_fn \
+                                    and step % self.eval_every == 0:
+                                ev = self.eval_fn(self.model, state["params"])
+                                if self.logger:
+                                    self.logger({"step": step,
+                                                 **{f"eval_{k}": v
+                                                    for k, v in ev.items()}})
+                            if ckpt is not None and self.save_policy(step):
+                                # snapshot completes before the next step can
+                                # donate the state buffers; serialization
+                                # runs on the writer thread
+                                ckpt.save(state, step,
+                                          extra=self._ckpt_extra())
+                            if inj is not None and \
+                                    inj.fire("preempt", step) is not None:
+                                guard.request()
+                            if guard is not None and guard.requested:
+                                stop_step = step
+                                break
                         flush()
-                        pending.append((step, metrics,
-                                        round(time.time() - t0, 2)))
-                    if self.eval_every and self.eval_fn and step % self.eval_every == 0:
-                        ev = self.eval_fn(self.model, state["params"])
+                    except _Rollback as rb:
+                        state, data_offset, rollbacks = self._rollback(
+                            state, rb.event, events, history,
+                            data_offset, rollbacks, ckpt)
+                        continue
+                    finally:
+                        close = getattr(batches, "close", None)
+                        if callable(close):
+                            close()  # stop an abandoned prefetch worker
+                    if stop_step:
+                        # graceful preemption: one synchronous final save at
+                        # the step boundary, then exit resumable
+                        if ckpt is not None:
+                            ckpt.save(state, stop_step,
+                                      extra=self._ckpt_extra())
+                            ckpt.wait()
+                        events.append(guard.event(stop_step))
                         if self.logger:
-                            self.logger({"step": step, **{f"eval_{k}": v for k, v in ev.items()}})
-                    if ckpt is not None and self.save_policy(step):
-                        # snapshot completes before the next step can donate
-                        # the state buffers; serialization runs on the
-                        # writer thread
-                        ckpt.save(state, step, extra=self._ckpt_extra())
-                flush()
+                            self.logger({"step": stop_step,
+                                         "event": "preempt"})
+                        preempted = True
+                        guard.clear()
+                    break
         finally:
             if ckpt is not None:
                 # the run's last checkpoint must be committed and the writer
@@ -258,7 +362,55 @@ class Gym:
                     close()
                 else:
                     ckpt.wait()
-        return {"state": state, "history": history}
+        return {"state": state, "history": history, "events": events,
+                "rollbacks": rollbacks, "preempted": preempted}
+
+    def _rollback(self, state, event, events, history, data_offset,
+                  rollbacks, ckpt):
+        """Recover from an anomaly: restore the newest committed checkpoint
+        strictly BEFORE the anomaly step (detection lags one metrics
+        window, so a checkpoint at/after it may hold corrupted state),
+        falling back to a fresh seed init.  Checkpoints at/after the
+        anomaly are deleted — they must never win a later "latest"
+        resolution.  Returns the new ``(state, data_offset, rollbacks)``."""
+        from ..ckpt import elastic as EL
+        from ..ckpt import format as CF
+        from ..resilience.sentinel import AnomalyError
+
+        anomaly_step = int(event["step"])
+        rollbacks += 1
+        if rollbacks > self.max_rollbacks:
+            events.append(dict(event, rollbacks=rollbacks, fatal=True))
+            raise AnomalyError(
+                f"anomaly at step {anomaly_step} ({event.get('reason')}): "
+                f"rollback budget ({self.max_rollbacks}) exhausted", event)
+        if ckpt is not None and hasattr(ckpt, "wait"):
+            ckpt.wait()  # in-flight saves must commit before we pick one
+        ckpt_dir = getattr(ckpt, "ckpt_dir", "") or self.ckpt_dir
+        ckpts = CF.list_checkpoints(ckpt_dir) if ckpt_dir else []
+        candidates = [(s, p) for s, p in ckpts if s < anomaly_step]
+        if candidates:
+            restored_step, path = max(candidates)
+            state = EL.restore(state, path, getattr(self, "_state_sh", None))
+        else:
+            state = self._init_state()
+            restored_step = int(jax.device_get(state["step"]))
+        for s, p in ckpts:
+            if s >= anomaly_step:
+                shutil.rmtree(p, ignore_errors=True)
+        history[:] = [m for m in history if m["step"] <= restored_step]
+        if self.sentinel is not None:
+            self.sentinel.reset()  # replayed steps re-observe their values
+        if self.skip_window:
+            data_offset += anomaly_step - restored_step
+        events.append(dict(event, rollbacks=rollbacks,
+                           restored_step=restored_step,
+                           data_offset=data_offset))
+        if self.logger:
+            self.logger({"step": anomaly_step, "event": "rollback",
+                         "reason": event.get("reason"),
+                         "restored_step": restored_step})
+        return state, data_offset, rollbacks
 
     def _ckpt_extra(self) -> Optional[Dict[str, Any]]:
         """Manifest extras: the run fingerprint, so a restore can tell when
@@ -303,6 +455,13 @@ class Gym:
             "final_loss": round(loss, 6),
             "prefetch": self.prefetch,
             "grad_accum": self.grad_accum,
+            # resilience fields — zero on a clean bench by construction
+            # (bench never rolls back or preempts); the schema guard in
+            # the bench CI job asserts exactly that
+            "rollback_count": 0,
+            "retry_count": int(getattr(self.checkpointer,
+                                       "retry_count", 0) or 0),
+            "graceful_exit": False,
         }
         gb = getattr(self.loader, "global_batch", None)
         seq = getattr(getattr(self.loader, "dataset", None), "seq_len", None)
@@ -311,6 +470,15 @@ class Gym:
             result["seq_len"] = int(seq)
             result["tokens_per_s"] = int(gb * seq * steps / wall) if wall > 0 else 0
         return result
+
+
+class _Rollback(Exception):
+    """Internal control flow: the sentinel tripped mid-flush; unwind the
+    current segment so :meth:`Gym._rollback` can restore and replay."""
+
+    def __init__(self, event: Dict[str, Any]):
+        super().__init__(event.get("reason", "anomaly"))
+        self.event = event
 
 
 class _nullctx:

@@ -1,0 +1,48 @@
+"""Fault tolerance (the seventh pillar): anomaly rollback, graceful
+preemption, retrying IO, and deterministic fault injection.
+
+Four cooperating layers, each usable alone:
+
+- :mod:`.sentinel` — :class:`StepSentinel` watches the gym's flushed
+  metrics windows for NaN/Inf loss and loss-spike z-scores; the gym rolls
+  back to the last committed checkpoint *before* the anomaly and replays.
+- :mod:`.preempt` — :class:`PreemptionGuard` turns SIGTERM/SIGINT into a
+  request for one final synchronous checkpoint at the next step boundary
+  and a distinct resumable exit (the soft-kill every cluster scheduler
+  sends before the SIGKILL the ckpt-roundtrip CI job already covers).
+- :mod:`.retry` — :class:`RetryPolicy` / :func:`call_with_retry`: bounded
+  exponential backoff with deterministic jitter and exception-class
+  filters, applied to checkpoint writer IO and sweep trials.
+- :mod:`.faults` — :class:`FaultInjector`: a registry component that
+  fires configured faults (NaN params, checkpoint-IO OSErrors, simulated
+  SIGTERM, serve-tick stalls) at exact step/call indices, so every
+  recovery path above is *tested*, not believed.
+
+Wired through the typed Run API as a ``resilience:`` block on
+train-shaped kinds (see ``docs/robustness.md``).
+"""
+from .faults import KNOWN_FAULTS, FaultSpec, FaultInjector
+from .preempt import PREEMPTED_EXIT_CODE, PreemptionGuard
+from .retry import (
+    TRANSIENT_EXCEPTIONS,
+    RetryError,
+    RetryPolicy,
+    call_with_retry,
+    classify_failure,
+)
+from .sentinel import AnomalyError, StepSentinel
+
+__all__ = [
+    "AnomalyError",
+    "FaultInjector",
+    "FaultSpec",
+    "KNOWN_FAULTS",
+    "PREEMPTED_EXIT_CODE",
+    "PreemptionGuard",
+    "RetryError",
+    "RetryPolicy",
+    "StepSentinel",
+    "TRANSIENT_EXCEPTIONS",
+    "call_with_retry",
+    "classify_failure",
+]

@@ -82,6 +82,10 @@ def build_parser() -> argparse.ArgumentParser:
                    help="ignore existing records, rerun every trial")
     s.add_argument("--max-trials", type=int, default=0,
                    help="cap how many new trials run this invocation")
+    s.add_argument("--retry-failed", action="store_true",
+                   help="on resume, re-run only transiently-failed trials "
+                        "(IO/timeout); deterministic failures keep their "
+                        "records")
 
     r = sub.add_parser("replay",
                        help="re-execute a run from its resolved.yaml artifact")
@@ -148,6 +152,14 @@ def _cmd_kind(args, kind: str) -> int:
             json.dump(result, f, indent=2, default=str)
     print(f"run artifact: {cfg.output_dir} ({result['fingerprint'][:15]}…)",
           flush=True)
+    if result.get("status") == "preempted":
+        # distinct resumable status (EX_TEMPFAIL): the scheduler should
+        # relaunch this exact command with resume intact
+        from ..resilience import PREEMPTED_EXIT_CODE
+
+        print(f"preempted: resume with the same command "
+              f"(exit {PREEMPTED_EXIT_CODE})", flush=True)
+        return PREEMPTED_EXIT_CODE
     return 0
 
 
@@ -186,7 +198,8 @@ def _cmd_sweep(args) -> int:
                       spec.objective_mode, spec.objective_metric)
         return 0
 
-    options = {"redo": args.redo, "max_trials": args.max_trials}
+    options = {"redo": args.redo, "max_trials": args.max_trials,
+               "retry_failed": args.retry_failed}
     if args.output_dir:
         options["output_dir"] = args.output_dir
     result = api.execute(cfg, options=options,

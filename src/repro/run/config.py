@@ -71,8 +71,10 @@ class TrainSettings:
     resume: Any = False           # false | true | "auto"
     warmstart: Any = None         # mapping -> WarmstartSettings
     gym_key: str = "gym"          # top-level graph entry that is the gym
+    resilience: Any = None        # mapping -> ResilienceSettings
 
     def __post_init__(self):
+        self.resilience = _coerce_resilience("train", self.resilience)
         if isinstance(self.resume, str):
             if self.resume != "auto":
                 raise RunError(f"run.train.resume must be true|false|auto, "
@@ -121,6 +123,113 @@ def _validate_train_like(kind: str, s) -> None:
         raise RunError(f"run.{kind}: resume and warmstart are mutually "
                        f"exclusive (resume continues THIS run; warmstart "
                        f"starts a new one from another run's checkpoint)")
+
+
+# ---------------------------------------------------------------------------
+# resilience (fault tolerance) — shared by the train-shaped kinds
+# ---------------------------------------------------------------------------
+def _validate_faults(where: str, faults: Any) -> list:
+    """The chaos-schedule grammar: a list of ``{kind, at, times, seconds}``
+    rows, each validated against the known fault kinds."""
+    if faults is None:
+        faults = []
+    if isinstance(faults, dict):
+        faults = [faults]
+    if not isinstance(faults, (list, tuple)):
+        raise RunError(f"{where} must be a list of "
+                       f"{{kind, at, times, seconds}} rows")
+    from ..resilience.faults import FaultSpec
+
+    rows = []
+    for row in faults:
+        if not isinstance(row, dict):
+            raise RunError(f"{where}: rows must be mappings, got {row!r}")
+        try:
+            FaultSpec(**row)
+        except (TypeError, ValueError) as e:
+            raise RunError(f"{where}: {e}") from e
+        rows.append(dict(row))
+    return rows
+
+
+@dataclasses.dataclass
+class SentinelSettings:
+    """``run.<kind>.resilience.sentinel``: anomaly detection over flushed
+    metric points — NaN/Inf always trips when ``nan``; a loss-spike trips
+    when its z-score against the rolling ``window`` exceeds
+    ``spike_zscore`` (0 disables; ``min_history`` guards noisy starts)."""
+
+    metric: str = "loss"
+    nan: bool = True
+    spike_zscore: float = 0.0
+    window: int = 32
+    min_history: int = 8
+
+
+@dataclasses.dataclass
+class RetrySettings:
+    """``run.<kind>.resilience.ckpt_retry`` (and the sweep spec's
+    ``retry:``): bounded exponential backoff with deterministic jitter for
+    transient IO.  ``max_attempts`` counts the first try."""
+
+    max_attempts: int = 3
+    base_delay_s: float = 0.05
+    max_delay_s: float = 2.0
+    jitter: float = 0.25
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise RunError(f"retry.max_attempts must be >= 1, "
+                           f"got {self.max_attempts}")
+
+
+@dataclasses.dataclass
+class ResilienceSettings:
+    """``run.<kind>.resilience``: the fault-tolerance block.
+
+    ``sentinel`` arms anomaly detection (rollback to the newest committed
+    checkpoint BEFORE the anomaly, up to ``max_rollbacks``;
+    ``skip_window: true`` additionally skips the anomalous data window on
+    replay — which changes the curve, so it is off by default).
+    ``preemption`` installs the SIGTERM/SIGINT graceful-exit guard.
+    ``ckpt_retry`` wraps checkpoint IO in retry-with-backoff.  ``faults``
+    is the deterministic chaos schedule (see
+    :mod:`repro.resilience.faults`)."""
+
+    sentinel: Any = None          # mapping/true -> SentinelSettings
+    max_rollbacks: int = 3
+    skip_window: bool = False
+    preemption: bool = True       # install the SIGTERM/SIGINT guard
+    ckpt_retry: Any = None        # mapping/true -> RetrySettings
+    faults: Any = ()              # chaos rows: {kind, at, times, seconds}
+
+    def __post_init__(self):
+        if self.max_rollbacks < 0:
+            raise RunError(f"resilience.max_rollbacks must be >= 0, "
+                           f"got {self.max_rollbacks}")
+        if self.sentinel is True:
+            self.sentinel = SentinelSettings()
+        elif self.sentinel is not None and not isinstance(
+                self.sentinel, SentinelSettings):
+            self.sentinel = _coerce_block("resilience", "sentinel",
+                                          self.sentinel, SentinelSettings)
+        if self.ckpt_retry is True:
+            self.ckpt_retry = RetrySettings()
+        elif self.ckpt_retry is not None and not isinstance(
+                self.ckpt_retry, RetrySettings):
+            self.ckpt_retry = _coerce_block("resilience", "ckpt_retry",
+                                            self.ckpt_retry, RetrySettings)
+        self.faults = _validate_faults("resilience.faults", self.faults)
+
+
+def _coerce_resilience(kind: str, value: Any) -> Any:
+    """``resilience:`` block: absent/None => no fault-tolerance wiring;
+    ``true`` => all defaults (sentinel stays off until configured)."""
+    if value is None or isinstance(value, ResilienceSettings):
+        return value
+    if value is True:
+        return ResilienceSettings()
+    return _coerce_block(kind, "resilience", value, ResilienceSettings)
 
 
 @dataclasses.dataclass
@@ -178,10 +287,12 @@ class SFTSettings:
     lora: Any = None              # mapping -> LoRASettings; None => full FT
     adapter_dir: str = ""         # default: <output_dir>/adapter
     export_merged: bool = False
+    resilience: Any = None        # mapping -> ResilienceSettings
 
     def __post_init__(self):
         _validate_train_like("sft", self)
         self.lora = _coerce_lora("sft", self.lora)
+        self.resilience = _coerce_resilience("sft", self.resilience)
 
 
 @dataclasses.dataclass
@@ -225,10 +336,12 @@ class DPOSettings:
     adapter_dir: str = ""
     beta: float = 0.1
     onpolicy: Any = None          # mapping -> OnPolicySettings
+    resilience: Any = None        # mapping -> ResilienceSettings
 
     def __post_init__(self):
         _validate_train_like("dpo", self)
         self.lora = _coerce_lora("dpo", self.lora)
+        self.resilience = _coerce_resilience("dpo", self.resilience)
         if self.beta <= 0:
             raise RunError(f"run.dpo.beta must be > 0, got {self.beta}")
         if self.onpolicy is not None and not isinstance(self.onpolicy,
@@ -380,12 +493,19 @@ class ServeSettings:
     workload: Any = None          # mapping -> WorkloadSettings
     compare_static: bool = True
     bench_dir: str = "."          # where BENCH_serve_<name>.json lands
+    deadline_s: float = 0.0       # per-request wall deadline (0 = none)
+    watchdog_s: float = 0.0       # no-progress tick watchdog (0 = off)
+    faults: Any = ()              # chaos rows (serve_stall)
 
     def __post_init__(self):
         self.sampling = _coerce_block("serve", "sampling", self.sampling,
                                       SamplingSettings)
         self.workload = _coerce_block("serve", "workload", self.workload,
                                       WorkloadSettings)
+        if self.deadline_s < 0 or self.watchdog_s < 0:
+            raise RunError(f"run.serve.deadline_s/watchdog_s must be >= 0, "
+                           f"got {self.deadline_s}/{self.watchdog_s}")
+        self.faults = _validate_faults("run.serve.faults", self.faults)
         if self.engine and self.n_slots < 1:
             raise RunError(f"run.serve.n_slots must be >= 1, "
                            f"got {self.n_slots}")

@@ -210,6 +210,38 @@ def _prepare_gym(ctx, s, gym) -> None:
 
         gym.run_fingerprint = _fp(
             {k: v for k, v in ctx.resolved_doc.items() if k != "run"})
+    _wire_resilience(ctx, s, gym)
+
+
+def _wire_resilience(ctx, s, gym) -> None:
+    """Build the gym's resilience collaborators from the settings'
+    ``resilience:`` block (no-op when absent, or for gyms without the
+    fields — e.g. a custom registry gym predating them)."""
+    r = getattr(s, "resilience", None)
+    if r is None or not hasattr(gym, "sentinel"):
+        return
+    from ..resilience import (FaultInjector, PreemptionGuard, RetryPolicy,
+                              StepSentinel)
+
+    if r.sentinel is not None and gym.sentinel is None:
+        sn = r.sentinel
+        gym.sentinel = StepSentinel(
+            metric=sn.metric, nan=sn.nan, spike_zscore=sn.spike_zscore,
+            window=sn.window, min_history=sn.min_history)
+        ctx.log(f"resilience: sentinel on {sn.metric!r} "
+                f"(nan={sn.nan}, spike_zscore={sn.spike_zscore})")
+    gym.max_rollbacks = r.max_rollbacks
+    gym.skip_window = r.skip_window
+    if r.ckpt_retry is not None and gym.ckpt_retry is None:
+        cr = r.ckpt_retry
+        gym.ckpt_retry = RetryPolicy(
+            max_attempts=cr.max_attempts, base_delay_s=cr.base_delay_s,
+            max_delay_s=cr.max_delay_s, jitter=cr.jitter)
+    if r.faults and gym.fault_injector is None:
+        gym.fault_injector = FaultInjector.from_config(r.faults)
+        ctx.log(f"resilience: {len(r.faults)} scheduled fault(s) armed")
+    if r.preemption and gym.preempt_guard is None:
+        gym.preempt_guard = PreemptionGuard().install()
 
 
 def _drive_gym(ctx, s, gym, before_run=None) -> Dict[str, Any]:
@@ -235,7 +267,12 @@ def _drive_gym(ctx, s, gym, before_run=None) -> Dict[str, Any]:
     # so interrupted + resumed reproduces the uninterrupted loss curve
     steps = max(0, s.steps - (resumed_from or 0))
     t0 = time.time()
-    out = gym.run(steps, state=state)
+    try:
+        out = gym.run(steps, state=state)
+    finally:
+        guard = getattr(gym, "preempt_guard", None)
+        if guard is not None:
+            guard.uninstall()  # a sweep drives many gyms in one process
     wall = time.time() - t0
     hist = out["history"]
     result: Dict[str, Any] = {
@@ -245,7 +282,33 @@ def _drive_gym(ctx, s, gym, before_run=None) -> Dict[str, Any]:
         "logged_points": len(hist),
         "history": hist,
         "_state": out["state"],
+        # resilience accounting (zero/False on clean runs by construction)
+        "rollback_count": int(out.get("rollbacks", 0)),
+        # getattr chains: a custom-registry gym need not carry the
+        # checkpointer/fault_injector attributes at all
+        "retry_count": int(getattr(getattr(gym, "checkpointer", None),
+                                   "retry_count", 0) or 0),
+        "graceful_exit": bool(out.get("preempted", False)),
     }
+    events = list(getattr(getattr(gym, "fault_injector", None),
+                          "events", None) or [])
+    events += out.get("events") or []
+    if out.get("preempted"):
+        import jax
+
+        result["status"] = "preempted"
+        result["completed_steps"] = int(jax.device_get(
+            out["state"]["step"]))
+        ctx.log(f"preempted at step {result['completed_steps']} — final "
+                f"checkpoint committed; rerun with resume: auto")
+    if events:
+        result["events"] = events
+        if ctx.cfg.output_dir and ctx.options.get("_write_files", True):
+            path = os.path.join(ctx.cfg.output_dir, "events.jsonl")
+            with open(path, "a") as f:
+                for ev in events:
+                    f.write(json.dumps(ev, default=str) + "\n")
+            result["events_file"] = path
     if resumed_from is not None:
         result["resumed_from"] = resumed_from
         if steps == 0:
@@ -576,12 +639,19 @@ def execute_serve(ctx) -> Dict[str, Any]:
     longest_prompt = w.prefix_len + max(w.prompt_lens)   # tails when prefixed
     max_len = s.max_len or (longest_prompt + max(w.gen_tokens))
     params = load_params(model, ckpt=s.ckpt, seed=s.seed)
+    fault_injector = None
+    if s.faults:
+        from ..resilience import FaultInjector
+
+        fault_injector = FaultInjector.from_config(s.faults)
     engine = ServeEngine(model, params, n_slots=s.n_slots, max_len=max_len,
                          mesh=mesh, plan=plan,
                          greedy=samp.temperature <= 0,
                          block_len=None if s.block_len < 0 else s.block_len,
                          n_blocks=s.n_blocks, prefill_chunk=s.prefill_chunk,
-                         prefix_cache=s.prefix_cache, log=ctx.log)
+                         prefix_cache=s.prefix_cache,
+                         deadline_s=s.deadline_s, watchdog_s=s.watchdog_s,
+                         fault_injector=fault_injector, log=ctx.log)
     if w.prefix_len:
         trace = shared_prefix_trace(
             w.n_requests, model.cfg.vocab, prefix_len=w.prefix_len,
@@ -603,6 +673,11 @@ def execute_serve(ctx) -> Dict[str, Any]:
             f"{'paged' if engine.paged else 'dense'} cache)")
     result: Dict[str, Any] = engine.run(trace, realtime=w.realtime)
     result["arch"] = model.cfg.name
+    # resilience fields per the BENCH_* schema (serving never rolls back
+    # or checkpoints; a clean engine run reports zeros)
+    result.setdefault("rollback_count", 0)
+    result.setdefault("retry_count", 0)
+    result.setdefault("graceful_exit", False)
     if plan is not None:
         result["plan"] = getattr(plan, "name", str(plan))
     if s.compare_static:
@@ -656,7 +731,9 @@ def execute_sweep(ctx) -> Dict[str, Any]:
     ctx.log(f"sweep {spec.name!r}: {len(trials)} trials -> {spec.output_dir}")
     runner = SweepRunner(spec, log=ctx.log)
     records = runner.run(resume=not ctx.options.get("redo", False),
-                         max_trials=int(ctx.options.get("max_trials", 0)))
+                         max_trials=int(ctx.options.get("max_trials", 0)),
+                         retry_failed=bool(
+                             ctx.options.get("retry_failed", False)))
     n_resumed = sum(1 for r in records if r.get("resumed"))
     n_failed = sum(1 for r in records if r.get("status") == "failed")
     ctx.log(f"done: {len(records)} records ({n_resumed} resumed, "

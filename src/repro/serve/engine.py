@@ -80,6 +80,8 @@ class ServeEngine:
                  greedy: bool = False, block_len: Optional[int] = None,
                  n_blocks: int = 0, prefill_chunk: int = 0,
                  prefix_cache: bool = True,
+                 deadline_s: float = 0.0, watchdog_s: float = 0.0,
+                 fault_injector=None,
                  log: Optional[Callable[[str], None]] = None):
         """``greedy=True`` compiles a sampler-free decode tick — use it when
         EVERY request this engine will serve is greedy (the static shim, or
@@ -109,10 +111,20 @@ class ServeEngine:
         if n_slots < 1 or max_len < 2:
             raise EngineError(f"need n_slots >= 1 and max_len >= 2, got "
                               f"{n_slots}/{max_len}")
+        if deadline_s < 0 or watchdog_s < 0:
+            raise EngineError(f"deadline_s/watchdog_s must be >= 0, got "
+                              f"{deadline_s}/{watchdog_s}")
         self.model = model
         self.n_slots = int(n_slots)
         self.max_len = int(max_len)
         self.cache_dtype = cache_dtype
+        # resilience: per-request wall deadline (0 = none; Request.deadline_s
+        # overrides per request), a no-progress watchdog on the fused tick
+        # (0 = off; only sane with warmup, else compile time trips it), and
+        # a fault injector for deterministic serve_stall chaos
+        self.deadline_s = float(deadline_s)
+        self.watchdog_s = float(watchdog_s)
+        self.fault_injector = fault_injector
         self.log = log or (lambda msg: None)
         self.mesh, self.plan = mesh, plan
         supports_paged = model.supports_paged_cache()
@@ -370,15 +382,29 @@ class ServeEngine:
         interleaved_ticks = 0
         cached_prompt_tokens = 0
         total_prompt_tokens = 0
+        timeouts = 0
+        # deadlines cost a scan per loop iteration — skip it entirely for
+        # the (default) deadline-free workload
+        deadlines_on = self.deadline_s > 0 or any(
+            getattr(r, "deadline_s", 0.0) > 0 for r in pending)
+
+        def req_expiry(r: Request):
+            """Absolute wall time (vs t0) this request must finish by."""
+            dl = getattr(r, "deadline_s", 0.0) or self.deadline_s
+            if dl <= 0:
+                return None
+            return (r.arrival_s if realtime else 0.0) + dl
+
         t0 = time.perf_counter()
 
-        def retire(slot: int, r: Request) -> None:
+        def retire(slot: int, r: Request, finish: str = "") -> None:
             stream = streams[r.rid]
             rows[r.rid].update(
                 n_gen=len(stream),
                 gen_ids=stream,
-                finish=("eos" if r.eos_id >= 0 and stream[-1] == r.eos_id
-                        else "length"),
+                finish=finish or ("eos" if r.eos_id >= 0
+                                  and stream[-1] == r.eos_id
+                                  else "length"),
                 done_s=round(time.perf_counter() - t0, 6),
             )
             slot_req.pop(slot, None)
@@ -396,6 +422,10 @@ class ServeEngine:
         def do_tick() -> None:
             nonlocal cache, slots, ticks, busy_slot_ticks, decode_s
             ta = time.perf_counter()
+            if self.fault_injector is not None:
+                stall = self.fault_injector.fire("serve_stall")
+                if stall is not None and stall.seconds > 0:
+                    time.sleep(stall.seconds)  # a hung collective, simulated
             if self.paged:
                 cache, slots, sampled, finished = self._tick(
                     self.params, cache, slots, self._pages_dev())
@@ -404,6 +434,11 @@ class ServeEngine:
                     self.params, cache, slots)
             sampled, finished = jax.device_get((sampled, finished))
             dt = time.perf_counter() - ta
+            if self.watchdog_s > 0 and dt > self.watchdog_s:
+                raise EngineError(
+                    f"no-progress watchdog: tick {ticks + 1} took {dt:.3f}s "
+                    f"(> watchdog_s={self.watchdog_s}) with "
+                    f"{len(slot_req)} request(s) in flight")
             decode_s += dt
             ticks += 1
             busy_slot_ticks += len(slot_req)
@@ -533,6 +568,27 @@ class ServeEngine:
 
         while pending or slot_req:
             now = time.perf_counter() - t0
+            if deadlines_on and pending:
+                # queued requests past their deadline retire unserved —
+                # admitting them would spend prefill on a dead answer
+                keep: deque = deque()
+                for r in pending:
+                    exp = req_expiry(r)
+                    if exp is not None and now > exp:
+                        rows[r.rid] = {
+                            "id": r.rid, "slot": -1,
+                            "prompt_len": r.prompt_len,
+                            "max_new": budgets[r.rid],
+                            "arrival_s": r.arrival_s if realtime else 0.0,
+                            "cached_tokens": 0, "prefill_chunks": 0,
+                            "n_gen": 0, "gen_ids": [],
+                            "finish": "timeout",
+                            "done_s": round(now, 6),
+                        }
+                        timeouts += 1
+                    else:
+                        keep.append(r)
+                pending = keep
             while free and pending and (not realtime
                                         or pending[0].arrival_s <= now):
                 r = pending[0]
@@ -548,19 +604,32 @@ class ServeEngine:
                     time.sleep(min(max(pending[0].arrival_s - now, 0.0), 0.05))
                 continue
             do_tick()
+            if deadlines_on and slot_req:
+                now = time.perf_counter() - t0
+                for slot in list(slot_req):
+                    r = slot_req[slot]
+                    exp = req_expiry(r)
+                    if exp is not None and now > exp \
+                            and "n_gen" not in rows[r.rid]:
+                        retire(slot, r, finish="timeout")
+                        timeouts += 1
 
         elapsed = time.perf_counter() - t0
         gen_tokens = sum(len(s) for s in streams.values())
         decode_tokens = gen_tokens - len(streams)   # firsts belong to prefill
         util = (busy_slot_ticks / (ticks * self.n_slots)) if ticks else 0.0
         decode_tok_s = decode_tokens / decode_s if decode_s > 0 else 0.0
-        hit = [w for w in rows.values() if w["cached_tokens"] > 0]
-        cold = [w for w in rows.values() if w["cached_tokens"] == 0]
+        # queued-expired rows were never admitted (no prefill/ttft sample)
+        admitted = [w for w in rows.values() if "prefill_s" in w]
+        hit = [w for w in admitted if w["cached_tokens"] > 0]
+        cold = [w for w in admitted if w["cached_tokens"] == 0]
         result: Dict[str, Any] = {
             "n_slots": self.n_slots,
             "max_len": self.max_len,
             "n_requests": len(rows),
-            "completed": sum(1 for row in rows.values() if "n_gen" in row),
+            "completed": sum(1 for row in rows.values()
+                             if row.get("finish") in ("eos", "length")),
+            "timeouts": timeouts,
             "generated_tokens": gen_tokens,
             "decode_tokens": decode_tokens,
             "compile_s": round(compile_s, 4),

@@ -28,6 +28,7 @@ class Request:
     top_k: int = 0                # <= 0 => disabled
     top_p: float = 1.0            # 1.0 => disabled
     eos_id: int = -1              # -1 => never stop on a token
+    deadline_s: float = 0.0       # wall budget from arrival; 0 => engine's
 
     @property
     def prompt_len(self) -> int:

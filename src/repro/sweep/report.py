@@ -112,13 +112,20 @@ def summarize(records: Sequence[Dict[str, Any]], metric: str,
     """Machine-readable report: counts, ranking, and the winner."""
     ranked = rank(records, metric, mode)
     by_status: Dict[str, int] = {}
+    by_error: Dict[str, int] = {}
     for rec in records:
         by_status[rec.get("status", "?")] = by_status.get(rec.get("status", "?"), 0) + 1
+        if rec.get("status") == "failed":
+            key = rec.get("error_type") or "?"
+            if rec.get("failure_kind"):
+                key = f"{key} ({rec['failure_kind']})"
+            by_error[key] = by_error.get(key, 0) + 1
     best = best_trial(records, metric, mode)
     return {
         "objective": {"metric": metric, "mode": mode},
         "n_trials": len(records),
         "by_status": by_status,
+        **({"failures_by_type": by_error} if by_error else {}),
         "best": None if best is None else {
             "trial_id": best["trial_id"],
             "patches": best.get("patches", {}),

@@ -8,6 +8,15 @@ finished trial appends one JSON line to ``<output_dir>/records.jsonl``; a
 rerun of the same sweep loads that file first and skips every trial whose
 record already exists (failed trials are retried), so an interrupted campaign
 resumes where it stopped.
+
+Failure records carry the exception class in a structured ``error_type``
+field plus a ``failure_kind`` transient/deterministic classification
+(:func:`repro.resilience.retry.classify_failure`); ``retry_failed``
+restricts a resume to re-running only the transiently-failed trials —
+a deterministic failure (bad config, shape error) replays identically,
+so burning a retry on it is waste.  A spec-level ``retry:`` block
+additionally wraps each trial in bounded in-process backoff before its
+failure is ever recorded.
 """
 from __future__ import annotations
 
@@ -205,11 +214,15 @@ class SweepRunner:
             json.dump(snap, f, indent=2, default=str)
 
     # -- execution ----------------------------------------------------------
-    def run(self, resume: bool = True,
-            max_trials: int = 0) -> List[Dict[str, Any]]:
+    def run(self, resume: bool = True, max_trials: int = 0,
+            retry_failed: bool = False) -> List[Dict[str, Any]]:
         """Run (or resume) the sweep; returns one record per trial, in trial
         order.  ``max_trials`` > 0 caps how many *new* trials execute (the
-        resume workflow for budgeted sessions)."""
+        resume workflow for budgeted sessions).  ``retry_failed`` narrows
+        which failed priors are re-run: only the transiently-failed ones
+        (``failure_kind != "deterministic"``; legacy records without the
+        field get the benefit of the doubt) — a deterministic failure
+        replays identically, so its record is carried forward instead."""
         spec = self.spec
         trials = spec.trials()
         self._write_spec_snapshot()
@@ -228,6 +241,13 @@ class SweepRunner:
                 records.append(prior)
                 self.log(f"[{trial.index + 1}/{len(trials)}] "
                          f"{trial.trial_id}: already done, skipping")
+                continue
+            if prior is not None and retry_failed and \
+                    prior.get("failure_kind") == "deterministic":
+                records.append(dict(prior, resumed=True))
+                self.log(f"[{trial.index + 1}/{len(trials)}] "
+                         f"{trial.trial_id}: deterministic failure "
+                         f"({prior.get('error_type', '?')}), not retried")
                 continue
             if max_trials and ran >= max_trials:
                 self.log(f"[{trial.index + 1}/{len(trials)}] "
@@ -254,10 +274,26 @@ class SweepRunner:
             record["run_dir"] = os.path.join("trials", trial.trial_id)
         t0 = time.time()
         try:
-            if getattr(backend, "accepts_trial", False):
-                metrics = backend(spec.trial_config(trial), trial=trial)
-            else:  # historic single-argument backends (tests, plugins)
-                metrics = backend(spec.trial_config(trial))
+            def attempt():
+                if getattr(backend, "accepts_trial", False):
+                    return backend(spec.trial_config(trial), trial=trial)
+                # historic single-argument backends (tests, plugins)
+                return backend(spec.trial_config(trial))
+
+            policy = self._retry_policy()
+            if policy is None:
+                metrics = attempt()
+            else:
+                from ..resilience.retry import call_with_retry
+
+                def note(n, exc):
+                    record["trial_retries"] = \
+                        record.get("trial_retries", 0) + 1
+                    self.log(f"  transient failure (attempt {n}): "
+                             f"{type(exc).__name__}: {exc} — retrying")
+
+                metrics = call_with_retry(attempt, policy=policy,
+                                          on_retry=note)
             if "skipped" in metrics:
                 record["status"] = "skipped"
                 record["skip_reason"] = metrics["skipped"]
@@ -265,17 +301,40 @@ class SweepRunner:
                 record["status"] = "ok"
                 record["metrics"] = metrics
         except Exception as e:  # record the failure, keep sweeping
+            from ..resilience.retry import RetryError, classify_failure
+
+            # an exhausted retry budget wraps the real failure: classify
+            # and report the underlying exception, not the wrapper
+            cause = e.__cause__ if isinstance(e, RetryError) \
+                and e.__cause__ is not None else e
             record["status"] = "failed"
-            record["error"] = f"{type(e).__name__}: {e}"
+            record["error"] = f"{type(cause).__name__}: {cause}"
+            record["error_type"] = type(cause).__name__
+            record["failure_kind"] = classify_failure(cause)
             record["traceback"] = traceback.format_exc(limit=8)
-            self.log(f"  FAILED: {record['error']}")
+            self.log(f"  FAILED ({record['failure_kind']}): "
+                     f"{record['error']}")
         record["wall_s"] = round(time.time() - t0, 2)
         self._append(record)
         return record
 
+    def _retry_policy(self):
+        """The spec-level ``retry:`` block as a RetryPolicy (None = off)."""
+        r = getattr(self.spec, "retry", None)
+        if not r:
+            return None
+        from ..resilience.retry import RetryPolicy
+
+        if isinstance(r, RetryPolicy):
+            return r
+        return RetryPolicy(**dict(r))
+
 
 def run_sweep(spec: SweepSpec, resume: bool = True,
               log: Optional[Callable[[str], None]] = None,
-              max_trials: int = 0) -> List[Dict[str, Any]]:
+              max_trials: int = 0,
+              retry_failed: bool = False) -> List[Dict[str, Any]]:
     """One-call convenience: execute a sweep spec and return its records."""
-    return SweepRunner(spec, log=log).run(resume=resume, max_trials=max_trials)
+    return SweepRunner(spec, log=log).run(resume=resume,
+                                          max_trials=max_trials,
+                                          retry_failed=retry_failed)

@@ -231,8 +231,13 @@ class SweepSpec:
     steps: int = 10
     gym_key: str = "gym"
     create_missing: bool = False
+    retry: Any = None             # mapping -> in-trial RetryPolicy kwargs
 
     def __post_init__(self) -> None:
+        if self.retry is not None and not isinstance(self.retry, dict):
+            raise SweepError("sweep 'retry' must be a mapping of "
+                             "RetryPolicy knobs (max_attempts, "
+                             "base_delay_s, max_delay_s, jitter)")
         if self.backend not in ("gym", "dryrun"):
             raise SweepError(f"unknown backend {self.backend!r}; "
                              f"expected 'gym' or 'dryrun'")
@@ -253,7 +258,7 @@ class SweepSpec:
         doc = dict(doc.get("sweep", doc))  # tolerate a top-level `sweep:` key
         known = {"name", "backend", "base", "base_config", "axes", "output_dir",
                  "objective", "seeds", "seed_path", "steps", "gym_key",
-                 "create_missing"}
+                 "create_missing", "retry"}
         unknown = set(doc) - known
         if unknown:
             raise SweepError(f"unknown sweep keys {sorted(unknown)}; "
@@ -284,6 +289,7 @@ class SweepSpec:
             steps=int(doc.get("steps", 10)),
             gym_key=doc.get("gym_key", "gym"),
             create_missing=bool(doc.get("create_missing", False)),
+            retry=doc.get("retry"),
         )
         if "seed_path" in doc:
             kwargs["seed_path"] = doc["seed_path"]

@@ -1,0 +1,616 @@
+"""The resilience subsystem (repro.resilience) and its wiring: retry
+primitive, anomaly sentinel, fault injection, graceful preemption, the
+checkpoint writer's error latch + retry, sweep failure classification /
+retry_failed resume, serve deadlines + watchdog, and the end-to-end
+chaos-parity contract — a run that hits an injected fault and recovers
+(rollback or preempt+resume) produces a loss curve bitwise identical to
+a clean run of the same config.
+"""
+import json
+import os
+import signal
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.components  # noqa: F401  (populates the registry)
+from repro.ckpt import AsyncCheckpointer, RetentionPolicy, list_checkpoints
+from repro.resilience import (
+    PREEMPTED_EXIT_CODE,
+    AnomalyError,
+    FaultInjector,
+    FaultSpec,
+    PreemptionGuard,
+    RetryError,
+    RetryPolicy,
+    StepSentinel,
+    call_with_retry,
+    classify_failure,
+)
+
+
+# ---------------------------------------------------------------------------
+# retry: the one bounded-backoff primitive
+# ---------------------------------------------------------------------------
+def test_retry_policy_delays_are_deterministic_and_bounded():
+    p = RetryPolicy(max_attempts=5, base_delay_s=0.05, max_delay_s=0.15,
+                    jitter=0.25)
+    delays = [p.delay_s(k) for k in (1, 2, 3, 4)]
+    # same schedule every call — deterministic jitter, no global RNG
+    assert delays == [p.delay_s(k) for k in (1, 2, 3, 4)]
+    for k, d in zip((1, 2, 3, 4), delays):
+        base = min(0.05 * 2.0 ** (k - 1), 0.15)
+        assert base <= d <= base * 1.25
+    # cap applies to the base before jitter
+    assert delays[3] <= 0.15 * 1.25
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError, match=">= 0"):
+        RetryPolicy(jitter=-1)
+
+
+def test_call_with_retry_absorbs_transient_then_succeeds():
+    calls, slept, noted = [], [], []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("disk hiccup")
+        return "ok"
+
+    out = call_with_retry(flaky, policy=RetryPolicy(max_attempts=4),
+                          on_retry=lambda a, e: noted.append((a, type(e))),
+                          sleep=slept.append)
+    assert out == "ok" and len(calls) == 3
+    assert noted == [(1, OSError), (2, OSError)]
+    assert len(slept) == 2
+
+
+def test_call_with_retry_exhaustion_raises_retry_error_from_last():
+    def always():
+        raise TimeoutError("never")
+
+    with pytest.raises(RetryError) as ei:
+        call_with_retry(always, policy=RetryPolicy(max_attempts=3),
+                        sleep=lambda s: None)
+    assert ei.value.attempts == 3
+    assert isinstance(ei.value.__cause__, TimeoutError)
+
+
+def test_call_with_retry_deterministic_failures_propagate_untouched():
+    calls = []
+
+    def bad():
+        calls.append(1)
+        raise ValueError("shape mismatch")
+
+    with pytest.raises(ValueError, match="shape"):
+        call_with_retry(bad, policy=RetryPolicy(max_attempts=5),
+                        sleep=lambda s: None)
+    assert len(calls) == 1  # no second attempt on a deterministic error
+
+
+def test_classify_failure():
+    assert classify_failure(OSError("io")) == "transient"
+    assert classify_failure(TimeoutError) == "transient"
+    assert classify_failure(ValueError("bad")) == "deterministic"
+    assert classify_failure(AssertionError) == "deterministic"
+    # a legacy record with no exception info gets the benefit of the doubt
+    assert classify_failure(None) == "transient"
+
+
+# ---------------------------------------------------------------------------
+# sentinel: NaN / spike detection over flushed metric points
+# ---------------------------------------------------------------------------
+def test_sentinel_trips_on_non_finite():
+    s = StepSentinel()
+    assert s.check(1, {"loss": 2.0}) is None
+    ev = s.check(2, {"loss": float("nan")})
+    assert ev["reason"] == "non_finite" and ev["step"] == 2
+    assert s.check(3, {"loss": float("inf")})["reason"] == "non_finite"
+    assert s.check(4, {"other": float("nan")}) is None  # watched metric only
+
+
+def test_sentinel_spike_needs_history_then_trips():
+    s = StepSentinel(spike_zscore=4.0, min_history=4)
+    for i in range(1, 6):
+        assert s.check(i, {"loss": 2.0 + 0.01 * i}) is None
+    ev = s.check(6, {"loss": 50.0})
+    assert ev and ev["reason"] == "spike" and ev["zscore"] > 4.0
+    # the spike was NOT absorbed into the window; a clean point passes
+    assert s.check(7, {"loss": 2.05}) is None
+
+
+def test_sentinel_warmup_never_trips():
+    # even wild values cannot trip the spike detector before min_history
+    s = StepSentinel(spike_zscore=1.0, min_history=8)
+    for i in range(7):
+        assert s.check(i, {"loss": float(10 ** i)}) is None
+
+
+def test_sentinel_flat_window_does_not_divide_by_zero():
+    s = StepSentinel(spike_zscore=3.0, min_history=2)
+    for i in range(4):
+        s.check(i, {"loss": 2.0})
+    # epsilon wiggle on a perfectly flat window: std floored, no trip
+    assert s.check(5, {"loss": 2.0 + 1e-9}) is None
+
+
+def test_sentinel_reset_forgets_history():
+    s = StepSentinel(spike_zscore=3.0, min_history=2)
+    for i in range(4):
+        s.check(i, {"loss": 2.0})
+    s.reset()
+    assert s.check(10, {"loss": 99.0}) is None  # back in warmup
+
+
+def test_sentinel_validation():
+    with pytest.raises(ValueError, match="window"):
+        StepSentinel(window=1)
+    with pytest.raises(ValueError, match="min_history"):
+        StepSentinel(min_history=1)
+    with pytest.raises(ValueError, match="spike_zscore"):
+        StepSentinel(spike_zscore=-1)
+
+
+# ---------------------------------------------------------------------------
+# fault injection: deterministic scheduled failures
+# ---------------------------------------------------------------------------
+def test_fault_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("meteor_strike")
+    with pytest.raises(ValueError, match="times"):
+        FaultSpec("nan_loss", times=-1)
+
+
+def test_injector_step_indexed_fires_once_by_default():
+    inj = FaultInjector([{"kind": "nan_loss", "at": 5}])
+    assert inj.pending("nan_loss") == 1
+    assert inj.fire("nan_loss", index=4) is None
+    assert inj.fire("nan_loss", index=5) is not None
+    assert inj.pending("nan_loss") == 0
+    # armed once: the replay of step 5 after a rollback runs clean
+    assert inj.fire("nan_loss", index=5) is None
+    assert [e["fault"] for e in inj.events] == ["nan_loss"]
+    assert inj.events[0]["index"] == 5
+
+
+def test_injector_times_fires_consecutively():
+    inj = FaultInjector([FaultSpec("ckpt_io", at=1, times=2)])
+    # call-indexed: internal counter advances on every query
+    assert inj.fire("ckpt_io") is None          # call 0
+    assert inj.fire("ckpt_io") is not None      # call 1
+    assert inj.fire("ckpt_io") is not None      # call 2
+    assert inj.fire("ckpt_io") is None          # exhausted
+    assert len(inj.events) == 2
+
+
+def test_injector_from_config_and_pending():
+    inj = FaultInjector.from_config([{"kind": "preempt", "at": 3},
+                                     {"kind": "serve_stall", "seconds": 0.1}])
+    assert inj.pending() == 2 and inj.pending("preempt") == 1
+    assert FaultInjector.from_config(None).pending() == 0
+    assert FaultInjector.from_config({"kind": "nan_loss"}).pending() == 1
+
+
+def test_corrupt_params_nans_float_leaves_only():
+    state = {"params": {"w": jnp.ones((2, 2), jnp.float32)},
+             "step": jnp.int32(7)}
+    out = FaultInjector.corrupt_params(state)
+    assert np.isnan(np.asarray(out["params"]["w"])).all()
+    assert int(out["step"]) == 7  # integer leaves untouched
+
+
+# ---------------------------------------------------------------------------
+# preemption guard
+# ---------------------------------------------------------------------------
+def test_guard_request_latch_and_event():
+    g = PreemptionGuard()
+    assert not g.requested
+    g.request(signal.SIGTERM)
+    assert g.requested and g.received == signal.SIGTERM
+    ev = g.event(12)
+    assert ev == {"kind": "preempt", "step": 12,
+                  "signal": signal.SIGTERM, "resumable": True}
+    g.clear()
+    assert not g.requested and g.received is None
+
+
+def test_guard_catches_real_sigterm_and_uninstall_restores():
+    prev = signal.getsignal(signal.SIGTERM)
+    g = PreemptionGuard()
+    with g:
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert g.requested and g.received == signal.SIGTERM
+    assert signal.getsignal(signal.SIGTERM) == prev
+    assert PREEMPTED_EXIT_CODE == 75
+
+
+# ---------------------------------------------------------------------------
+# checkpoint writer: error latch reusability + retry absorption
+# ---------------------------------------------------------------------------
+def test_checkpointer_usable_after_reraised_failure(tmp_path):
+    """Regression: a failed background save latches its error and raising
+    it must CLEAR the latch — the same checkpointer keeps working, and a
+    later good save must not re-raise the stale failure."""
+    d = str(tmp_path / "ck")
+    ck = AsyncCheckpointer(d, RetentionPolicy(keep_last=4),
+                           fault_injector=FaultInjector(
+                               [{"kind": "ckpt_io", "at": 0}]))
+    tree = {"w": jnp.arange(4, dtype=jnp.float32)}
+    ck.save(tree, 1)
+    with pytest.raises(OSError, match="injected ckpt_io"):
+        ck.wait()
+    # the failed step never committed, but the engine is still alive:
+    ck.save(tree, 2)
+    ck.wait()  # must NOT raise again
+    assert [s for s, _ in list_checkpoints(d)] == [2]
+    ck.close()
+
+
+def test_checkpointer_retry_absorbs_transient_io(tmp_path):
+    d = str(tmp_path / "ck")
+    ck = AsyncCheckpointer(
+        d, RetentionPolicy(keep_last=4),
+        retry=RetryPolicy(max_attempts=3, base_delay_s=0.001),
+        fault_injector=FaultInjector([{"kind": "ckpt_io", "at": 0,
+                                       "times": 2}]))
+    ck.save({"w": jnp.zeros(2)}, 1)
+    ck.wait()  # two injected failures absorbed inside the writer
+    assert ck.retry_count == 2
+    assert [s for s, _ in list_checkpoints(d)] == [1]
+    ck.close()
+
+
+def test_checkpointer_retry_exhaustion_still_latches(tmp_path):
+    ck = AsyncCheckpointer(
+        str(tmp_path / "ck"), retry=RetryPolicy(max_attempts=2,
+                                                base_delay_s=0.001),
+        fault_injector=FaultInjector([{"kind": "ckpt_io", "at": 0,
+                                       "times": 0}]))
+    ck.save({"w": jnp.zeros(2)}, 1)
+    with pytest.raises(RetryError):
+        ck.wait()
+    ck.close()
+
+
+# ---------------------------------------------------------------------------
+# run config: the resilience block
+# ---------------------------------------------------------------------------
+def test_resilience_settings_coercion_and_validation():
+    from repro.run.config import RunError, TrainSettings
+
+    s = TrainSettings(resilience={"sentinel": True, "max_rollbacks": 2,
+                                  "ckpt_retry": {"max_attempts": 4},
+                                  "faults": [{"kind": "nan_loss", "at": 3}]})
+    assert s.resilience.sentinel.metric == "loss"
+    assert s.resilience.max_rollbacks == 2
+    assert s.resilience.ckpt_retry.max_attempts == 4
+    assert s.resilience.faults[0]["kind"] == "nan_loss"
+
+    with pytest.raises(RunError, match="unknown fault kind"):
+        TrainSettings(resilience={"faults": [{"kind": "nope"}]})
+    with pytest.raises(RunError, match="max_attempts"):
+        TrainSettings(resilience={"ckpt_retry": {"max_attempts": 0}})
+    with pytest.raises(RunError):
+        TrainSettings(resilience={"sentinel": {"bogus_knob": 1}})
+
+
+# ---------------------------------------------------------------------------
+# end-to-end chaos parity (train + sft)
+# ---------------------------------------------------------------------------
+def _train_doc(tmp_path, name, steps, **train):
+    prefix = str(tmp_path / "data")
+    return {
+        "run": {"kind": "train", "name": name,
+                "output_dir": str(tmp_path / name),
+                "train": {"steps": steps, **train}},
+        "arch": {"component_key": "arch_config", "variant_key": "stablelm_1p6b",
+                 "config": {"reduced": True, "n_layers": 1}},
+        "model": {"component_key": "model", "variant_key": "auto",
+                  "config": {"arch_config": {"instance_key": "arch"}}},
+        "optimizer": {"component_key": "optimizer", "variant_key": "adamw",
+                      "config": {"lr": 0.001}},
+        "dataset": {"component_key": "dataset", "variant_key": "synthetic",
+                    "config": {"n_tokens": 40000, "vocab": 512,
+                               "prefix": prefix, "seq_len": 32, "seed": 0}},
+        "loader": {"component_key": "loader", "variant_key": "sharded",
+                   "config": {"dataset": {"instance_key": "dataset"},
+                              "global_batch": 4}},
+        "gym": {"component_key": "gym", "variant_key": "standard",
+                "config": {"model": {"instance_key": "model"},
+                           "optimizer": {"instance_key": "optimizer"},
+                           "loader": {"instance_key": "loader"},
+                           "log_every": 1, "prefetch": 0,
+                           "ckpt_every": 2}},
+    }
+
+
+def _sft_doc(tmp_path, name, steps, **sft):
+    doc = _train_doc(tmp_path, name, steps)
+    doc["run"] = {"kind": "sft", "name": name,
+                  "output_dir": str(tmp_path / name),
+                  "sft": {"steps": steps, **sft}}
+    doc["dataset"] = {"component_key": "dataset",
+                      "variant_key": "sft_synthetic",
+                      "config": {"seq_len": 24, "vocab": 512,
+                                 "n_examples": 64, "seed": 0}}
+    return doc
+
+
+def _curves_equal(clean, chaos):
+    cw = {m["step"]: m["loss"] for m in clean}
+    xw = {m["step"]: m["loss"] for m in chaos}
+    assert set(cw) == set(xw)
+    for s in cw:
+        assert cw[s] == xw[s], f"step {s}: {cw[s]} != {xw[s]}"
+
+
+@pytest.mark.parametrize("make_doc", [_train_doc, _sft_doc],
+                         ids=["train", "sft"])
+def test_nan_rollback_curve_parity(tmp_path, make_doc):
+    """A NaN loss at step 5 is detected (one window late), the gym rolls
+    back to the newest checkpoint before the anomaly, and the replayed
+    tail is bitwise identical to a clean run — the chaos-parity contract
+    on both the pretraining and SFT run kinds."""
+    from repro.run import api
+
+    clean = api.execute_doc(make_doc(tmp_path, "clean", 8), write_files=False)
+    assert clean["rollback_count"] == 0 and clean["retry_count"] == 0
+    assert clean["graceful_exit"] is False
+
+    chaos = api.execute_doc(make_doc(
+        tmp_path, "chaos", 8,
+        resilience={"sentinel": True,
+                    "faults": [{"kind": "nan_loss", "at": 5}]}))
+    assert chaos["rollback_count"] == 1
+    _curves_equal(clean["history"], chaos["history"])
+
+    events = _events(chaos)
+    assert [e["kind"] for e in events] == ["fault", "anomaly"]
+    rb = next(e for e in events if e["kind"] == "anomaly")
+    assert rb["reason"] == "non_finite" and rb["step"] == 5
+    assert rb["restored_step"] < 5 and rb["rollbacks"] == 1
+
+
+def _events(result):
+    with open(result["events_file"]) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def test_nan_params_rollback_discards_poisoned_checkpoints(tmp_path):
+    """nan_params corrupts real training state, so checkpoints committed
+    at/after the anomaly are poisoned — rollback must delete them so a
+    later resume can never restore NaN state."""
+    from repro.run import api
+
+    clean = api.execute_doc(_train_doc(tmp_path, "clean", 8),
+                            write_files=False)
+    chaos = api.execute_doc(_train_doc(
+        tmp_path, "chaos", 8,
+        resilience={"sentinel": True,
+                    "faults": [{"kind": "nan_params", "at": 5}]}))
+    assert chaos["rollback_count"] == 1
+    _curves_equal(clean["history"], chaos["history"])
+    steps = [s for s, _ in list_checkpoints(str(tmp_path / "chaos" / "ckpt"))]
+    assert steps and all(np.isfinite(m["loss"]) for m in chaos["history"])
+
+
+def test_rollback_budget_exhaustion_is_fatal(tmp_path):
+    from repro.run import api
+
+    with pytest.raises(AnomalyError, match="rollback"):
+        api.execute_doc(_train_doc(
+            tmp_path, "doomed", 8,
+            resilience={"sentinel": True, "max_rollbacks": 1,
+                        "faults": [{"kind": "nan_loss", "at": 3,
+                                    "times": 0}]}))
+
+
+def test_ckpt_io_fault_absorbed_by_retry_in_run(tmp_path):
+    from repro.run import api
+
+    clean = api.execute_doc(_train_doc(tmp_path, "clean", 6),
+                            write_files=False)
+    chaos = api.execute_doc(_train_doc(
+        tmp_path, "chaos", 6,
+        resilience={"ckpt_retry": {"max_attempts": 3,
+                                   "base_delay_s": 0.001},
+                    "faults": [{"kind": "ckpt_io", "at": 0}]}))
+    assert chaos["retry_count"] == 1 and chaos["rollback_count"] == 0
+    _curves_equal(clean["history"], chaos["history"])
+
+
+def test_preempt_then_resume_completes_budget(tmp_path):
+    """A (simulated) SIGTERM at step 3 stops the run at the boundary with
+    a final sync checkpoint and a distinct resumable status; `resume:
+    auto` then finishes the budget and the combined curve is bitwise the
+    clean run's."""
+    from repro.run import api
+
+    clean = api.execute_doc(_train_doc(tmp_path, "clean", 8),
+                            write_files=False)
+    part = api.execute_doc(_train_doc(
+        tmp_path, "pre", 8,
+        resilience={"faults": [{"kind": "preempt", "at": 3}]}))
+    assert part["status"] == "preempted"
+    assert part["graceful_exit"] is True
+    assert part["completed_steps"] == 3
+    # the boundary checkpoint committed even though ckpt_every would not
+    # have saved at step 3
+    assert 3 in [s for s, _ in list_checkpoints(str(tmp_path / "pre" / "ckpt"))]
+
+    res = api.execute_doc(_train_doc(tmp_path, "pre", 8, resume="auto"))
+    assert res["resumed_from"] == 3 and res["steps_this_run"] == 5
+    merged = {m["step"]: m["loss"] for m in part["history"]}
+    merged.update({m["step"]: m["loss"] for m in res["history"]})
+    want = {m["step"]: m["loss"] for m in clean["history"]}
+    assert merged == want
+
+
+# ---------------------------------------------------------------------------
+# sweep: failure classification + retry_failed resume
+# ---------------------------------------------------------------------------
+def _chaos_sweep(tmp_path, fail):
+    """A 3-trial sweep whose backend consults ``fail`` — a dict mapping
+    lr -> list of exceptions raised on successive calls for that trial."""
+    from repro.sweep.spec import SweepSpec
+
+    spec = SweepSpec.from_dict({
+        "name": "chaos", "base": {"opt": {"lr": 0.1}},
+        "axes": [{"type": "grid",
+                  "parameters": {"opt.lr": [0.1, 0.2, 0.3]}}],
+        "output_dir": str(tmp_path / "sweep"), "seed_path": None,
+    })
+    calls = []
+
+    def factory(s):
+        def run(raw):
+            lr = raw["opt"]["lr"]
+            calls.append(lr)
+            planned = fail.get(lr)
+            if planned:
+                raise planned.pop(0)
+            return {"final_loss": lr * 2, "wall_s": 0.0}
+
+        return run
+
+    return spec, factory, calls
+
+
+def test_sweep_failure_records_carry_error_type(tmp_path, monkeypatch):
+    from repro.sweep import runner as runner_mod
+    from repro.sweep.report import summarize
+    from repro.sweep.runner import SweepRunner
+
+    spec, factory, _ = _chaos_sweep(
+        tmp_path, {0.2: [ValueError("bad shape")]})
+    monkeypatch.setitem(runner_mod.BACKENDS, "gym", factory)
+    records = SweepRunner(spec).run()
+    failed = [r for r in records if r["status"] == "failed"]
+    assert len(failed) == 1
+    assert failed[0]["error_type"] == "ValueError"
+    assert failed[0]["failure_kind"] == "deterministic"
+    summary = summarize(records, "final_loss")
+    assert summary["failures_by_type"] == {"ValueError (deterministic)": 1}
+
+
+def test_sweep_retry_failed_reruns_transient_keeps_deterministic(
+        tmp_path, monkeypatch):
+    """retry_failed convergence: after a sweep with one transient and one
+    deterministic failure, a retry_failed resume re-runs ONLY the
+    transient trial (to success), never re-runs succeeded trials, and
+    carries the deterministic record forward."""
+    from repro.sweep import runner as runner_mod
+    from repro.sweep.runner import SweepRunner
+
+    spec, factory, calls = _chaos_sweep(
+        tmp_path, {0.2: [OSError("flaky fs")], 0.3: [ValueError("bad")]})
+    monkeypatch.setitem(runner_mod.BACKENDS, "gym", factory)
+    first = SweepRunner(spec).run()
+    assert [r["status"] for r in first] == ["ok", "failed", "failed"]
+    assert first[1]["failure_kind"] == "transient"
+
+    calls.clear()
+    second = SweepRunner(spec).run(retry_failed=True)
+    assert calls == [0.2]  # only the transient trial re-ran
+    by_lr = {r["patches"]["opt.lr"]: r for r in second}
+    assert by_lr[0.1]["resumed"] and by_lr[0.1]["status"] == "ok"
+    assert by_lr[0.2]["status"] == "ok" and not by_lr[0.2].get("resumed")
+    assert by_lr[0.3]["status"] == "failed" and by_lr[0.3]["resumed"]
+
+
+def test_sweep_in_trial_retry_policy_absorbs_transients(tmp_path,
+                                                        monkeypatch):
+    from repro.sweep import runner as runner_mod
+    from repro.sweep.runner import SweepRunner
+
+    spec, factory, calls = _chaos_sweep(
+        tmp_path, {0.2: [OSError("once"), OSError("twice")]})
+    spec.retry = {"max_attempts": 3, "base_delay_s": 0.001}
+    monkeypatch.setitem(runner_mod.BACKENDS, "gym", factory)
+    records = SweepRunner(spec).run()
+    assert [r["status"] for r in records] == ["ok"] * 3
+    assert records[1]["trial_retries"] == 2
+    assert calls.count(0.2) == 3
+
+
+def test_sweep_retry_exhaustion_classifies_the_cause(tmp_path, monkeypatch):
+    """When the in-trial retry budget runs out, the record classifies the
+    UNDERLYING exception (unwrapped from RetryError), not the wrapper."""
+    from repro.sweep import runner as runner_mod
+    from repro.sweep.runner import SweepRunner
+
+    spec, factory, _ = _chaos_sweep(
+        tmp_path, {0.2: [OSError("a"), OSError("b")]})
+    spec.retry = {"max_attempts": 2, "base_delay_s": 0.001}
+    monkeypatch.setitem(runner_mod.BACKENDS, "gym", factory)
+    records = SweepRunner(spec).run()
+    assert records[1]["status"] == "failed"
+    assert records[1]["error_type"] == "OSError"
+    assert records[1]["failure_kind"] == "transient"
+
+
+# ---------------------------------------------------------------------------
+# serve: per-request deadlines + no-progress watchdog
+# ---------------------------------------------------------------------------
+def _serve_model():
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    import jax
+
+    model = build_model(get_reduced("qwen1p5_0p5b"))
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def test_serve_deadline_times_out_queued_request():
+    from repro.serve.engine import ServeEngine
+    from repro.serve.workload import synthetic_trace
+
+    model, params = _serve_model()
+    trace = synthetic_trace(2, model.cfg.vocab, seed=3, rate=0.0,
+                            prompt_lens=(6,), gen_tokens=(4,), max_len=16)
+    trace[0].deadline_s = 1e-9  # expires before it can ever be admitted
+    engine = ServeEngine(model, params, n_slots=1, max_len=16)
+    res = engine.run(trace, realtime=True)
+    assert res["timeouts"] == 1 and res["completed"] == 1
+    rows = {r["id"]: r for r in res["requests"]}
+    assert rows[0]["finish"] == "timeout" and rows[0]["n_gen"] == 0
+    assert rows[1]["finish"] in ("eos", "length")
+
+
+def test_serve_deadline_zero_means_no_deadline():
+    from repro.serve.engine import ServeEngine
+    from repro.serve.workload import synthetic_trace
+
+    model, params = _serve_model()
+    trace = synthetic_trace(2, model.cfg.vocab, seed=3, rate=0.0,
+                            prompt_lens=(6,), gen_tokens=(4,), max_len=16)
+    engine = ServeEngine(model, params, n_slots=1, max_len=16)
+    res = engine.run(trace, realtime=False)
+    assert res["timeouts"] == 0 and res["completed"] == 2
+
+
+def test_serve_watchdog_trips_on_injected_stall():
+    from repro.serve.engine import EngineError, ServeEngine
+    from repro.serve.workload import synthetic_trace
+
+    model, params = _serve_model()
+    trace = synthetic_trace(1, model.cfg.vocab, seed=3, rate=0.0,
+                            prompt_lens=(6,), gen_tokens=(4,), max_len=16)
+    # warmup precompiles the tick, so a compiled tick is far under the
+    # watchdog; the injected 0.25s stall is far over it
+    engine = ServeEngine(
+        model, params, n_slots=1, max_len=16, watchdog_s=0.1,
+        fault_injector=FaultInjector([{"kind": "serve_stall", "at": 0,
+                                       "seconds": 0.25}]))
+    with pytest.raises(EngineError, match="watchdog"):
+        engine.run(trace, realtime=False)
+
+    # validation: negative knobs rejected
+    with pytest.raises(EngineError, match=">= 0"):
+        ServeEngine(model, params, n_slots=1, max_len=16, deadline_s=-1)
