@@ -170,6 +170,17 @@ def register_all() -> None:
          IF.TrackerIF)
     _reg("tracker", "jsonl", lambda path: _JsonlTracker(path), IF.TrackerIF)
 
+    # -- telemetry sinks (repro.telemetry) ----------------------------------
+    from ..telemetry.sinks import (CsvSink, JsonlSink, ListSink, MultiSink,
+                                   StdoutSink, TelemetrySink)
+
+    _reg("sink", "jsonl", lambda path: JsonlSink(path), TelemetrySink)
+    _reg("sink", "csv", lambda path: CsvSink(path), TelemetrySink)
+    _reg("sink", "stdout", lambda prefix="telemetry ": StdoutSink(prefix),
+         TelemetrySink)
+    _reg("sink", "memory", lambda: ListSink(), TelemetrySink)
+    _reg("sink", "multi", lambda sinks: MultiSink(list(sinks)), TelemetrySink)
+
     # -- gym ---------------------------------------------------------------------
     _reg("gym", "standard",
          lambda model, optimizer, loader, mesh_provider=None, sharding_plan=None,

@@ -62,6 +62,9 @@ class Gym:
     max_rollbacks: int = 3                # anomaly rollbacks before fatal
     skip_window: bool = False             # skip the anomalous data window
     ckpt_retry: Any = None                # RetryPolicy for checkpoint IO
+    # -- telemetry (see repro.telemetry; both optional) --------------------
+    telemetry: Any = None                 # TelemetryRecorder (unified sink)
+    profiler: Any = None                  # ProfilerHook (jax.profiler window)
 
     def setup(self):
         if self.mesh is not None and self.plan is not None:
@@ -244,8 +247,11 @@ class Gym:
         events: List[Dict[str, Any]] = []
         rollbacks = 0
         preempted = False
+        dispatched = 0   # every step the loop issued, incl. replays
         data_offset = 0  # grows when skip_window drops anomalous batches
-        t0 = time.time()
+        t_run0 = time.perf_counter()  # full-precision monotonic epoch
+        tel = self.telemetry
+        do_spans = tel is not None and tel.spans
         inj = self.fault_injector
         guard = self.preempt_guard
         if guard is None and inj is not None and inj.pending("preempt"):
@@ -270,6 +276,8 @@ class Gym:
                     def flush(pending=pending):
                         if not pending:
                             return
+                        t_f0 = time.perf_counter()
+                        last_step = pending[-1][0]
                         fetched = jax.device_get([m for _, m, _ in pending])
                         rows = list(zip(list(pending), fetched))
                         pending.clear()
@@ -280,6 +288,11 @@ class Gym:
                                 m["loss"] = float("nan")
                             m["step"] = step
                             m["wall_s"] = wall
+                            if tel is not None:
+                                # telemetry sees the observation even when
+                                # the sentinel is about to trip on it
+                                tel.metric(step, {k: v for k, v in m.items()
+                                                  if k != "step"})
                             if self.sentinel is not None:
                                 anomaly = self.sentinel.check(step, m)
                                 if anomaly is not None:
@@ -287,18 +300,41 @@ class Gym:
                             history.append(m)
                             if self.logger:
                                 self.logger(m)
+                        if do_spans:
+                            tel.span_row("gym/flush", t_f0,
+                                         time.perf_counter(), step=last_step)
 
                     loader = self._wrapped_loader()
                     batches = loader.batches(target - current,
                                              start_step=current + data_offset)
                     stop_step = 0
                     try:
-                        for i, batch in enumerate(batches):
+                        it = iter(batches)
+                        i = 0
+                        while True:
+                            # manual next() so the host-side wait for data
+                            # is its own span, separated from dispatch
+                            t_wait0 = time.perf_counter()
+                            try:
+                                batch = next(it)
+                            except StopIteration:
+                                break
+                            t_wait1 = time.perf_counter()
                             step = current + i + 1
+                            i += 1
+                            if self.profiler is not None:
+                                self.profiler.step_begin(step)
                             if inj is not None and \
                                     inj.fire("nan_params", step) is not None:
                                 state = inj.corrupt_params(state)
                             state, metrics = self._step(state, batch)
+                            dispatched += 1
+                            if do_spans:
+                                t_disp = time.perf_counter()
+                                tel.span_row("gym/data_wait", t_wait0,
+                                             t_wait1, step=step)
+                                tel.span_row("gym/step", t_wait1, t_disp,
+                                             step=step)
                             if self.log_every and (step % self.log_every == 0
                                                    or step == start + 1):
                                 # fetch the PREVIOUS window now (long since
@@ -307,20 +343,35 @@ class Gym:
                                 # never blocked on this step's metrics
                                 flush()
                                 pending.append((step, metrics,
-                                                round(time.time() - t0, 2)))
+                                                time.perf_counter() - t_run0))
                             if self.eval_every and self.eval_fn \
                                     and step % self.eval_every == 0:
                                 ev = self.eval_fn(self.model, state["params"])
+                                row = {"step": step,
+                                       **{f"eval_{k}": float(v)
+                                          for k, v in ev.items()}}
+                                # eval points belong to the run record, not
+                                # just the logger stream
+                                history.append(row)
+                                if tel is not None:
+                                    tel.metric(step,
+                                               {k: v for k, v in row.items()
+                                                if k != "step"})
                                 if self.logger:
-                                    self.logger({"step": step,
-                                                 **{f"eval_{k}": v
-                                                    for k, v in ev.items()}})
+                                    self.logger(row)
                             if ckpt is not None and self.save_policy(step):
                                 # snapshot completes before the next step can
                                 # donate the state buffers; serialization
                                 # runs on the writer thread
+                                t_ck0 = time.perf_counter()
                                 ckpt.save(state, step,
                                           extra=self._ckpt_extra())
+                                if do_spans:
+                                    tel.span_row("gym/ckpt", t_ck0,
+                                                 time.perf_counter(),
+                                                 step=step)
+                            if self.profiler is not None:
+                                self.profiler.step_end(step)
                             if inj is not None and \
                                     inj.fire("preempt", step) is not None:
                                 guard.request()
@@ -345,6 +396,8 @@ class Gym:
                                       extra=self._ckpt_extra())
                             ckpt.wait()
                         events.append(guard.event(stop_step))
+                        if tel is not None:
+                            tel.event("preempt", step=stop_step)
                         if self.logger:
                             self.logger({"step": stop_step,
                                          "event": "preempt"})
@@ -352,6 +405,8 @@ class Gym:
                         guard.clear()
                     break
         finally:
+            if self.profiler is not None:
+                self.profiler.close()
             if ckpt is not None:
                 # the run's last checkpoint must be committed and the writer
                 # thread must not outlive the run (a sweep builds one gym per
@@ -362,8 +417,11 @@ class Gym:
                     close()
                 else:
                     ckpt.wait()
+        final_step = int(jax.device_get(state["step"]))
         return {"state": state, "history": history, "events": events,
-                "rollbacks": rollbacks, "preempted": preempted}
+                "rollbacks": rollbacks, "preempted": preempted,
+                "steps_dispatched": dispatched,
+                "productive_steps": max(0, final_step - start)}
 
     def _rollback(self, state, event, events, history, data_offset,
                   rollbacks, ckpt):
@@ -406,6 +464,11 @@ class Gym:
         events.append(dict(event, rollbacks=rollbacks,
                            restored_step=restored_step,
                            data_offset=data_offset))
+        if self.telemetry is not None:
+            self.telemetry.event("rollback", step=anomaly_step,
+                                 reason=event.get("reason"),
+                                 restored_step=restored_step,
+                                 rollbacks=rollbacks)
         if self.logger:
             self.logger({"step": anomaly_step, "event": "rollback",
                          "reason": event.get("reason"),
@@ -420,55 +483,104 @@ class Gym:
         return {"fingerprint": self.run_fingerprint}
 
     # -- benchmarking ------------------------------------------------------
-    def bench(self, steps: int = 20, warmup: int = 3) -> Dict[str, Any]:
-        """Measure the hot path: compile time, steady-state step time, and
-        tokens/sec. The ONE timing implementation behind the ``bench`` run
-        kind (``python -m repro bench``) and ``benchmarks/``."""
-        t0 = time.time()
+    def bench(self, steps: int = 20, warmup: int = 3,
+              windows: int = 5) -> Dict[str, Any]:
+        """Measure the hot path: compile time, steady-state step time,
+        tokens/sec, and modeled MFU. The ONE timing implementation behind
+        the ``bench`` run kind (``python -m repro bench``) and
+        ``benchmarks/``.
+
+        The ``steps`` are split into ``windows`` synchronized windows and
+        ``steady_step_ms`` is the median of the per-window step times —
+        a single long window lets one scheduler hiccup in a noisy
+        container skew the whole figure (wall-clock swings of ~50% are
+        documented in CHANGES.md); the median of several windows is
+        robust to it.  Per-window rows ship in the result for
+        inspection.
+        """
+        import statistics
+
+        t0 = time.perf_counter()
         state = self.setup()
-        setup_s = time.time() - t0
+        setup_s = time.perf_counter() - t0
         start = int(state["step"])
+        tel = self.telemetry
+        n_w = max(1, min(int(windows), steps))
+        base, rem = divmod(steps, n_w)
+        sizes = [base + (1 if w < rem else 0) for w in range(n_w)]
+        sizes = [s for s in sizes if s > 0]
         ctx = self.mesh if self.mesh is not None else _nullctx()
         with ctx:
             loader = self._wrapped_loader()
             it = iter(loader.batches(1 + warmup + steps, start_step=start))
-            t0 = time.time()
+            t0 = time.perf_counter()
             state, m = self._step(state, next(it))
             jax.block_until_ready(m)
-            compile_s = time.time() - t0  # first call: trace+compile+run
+            compile_s = time.perf_counter() - t0  # first call: trace+compile+run
             for _ in range(warmup):
                 state, m = self._step(state, next(it))
             jax.block_until_ready(m)
-            t0 = time.time()
-            for _ in range(steps):
-                state, m = self._step(state, next(it))
-            jax.block_until_ready((m, state["step"]))
-            wall = time.time() - t0
+            window_rows: List[Dict[str, Any]] = []
+            for k in sizes:
+                tw0 = time.perf_counter()
+                for _ in range(k):
+                    state, m = self._step(state, next(it))
+                jax.block_until_ready(m)
+                tw1 = time.perf_counter()
+                window_rows.append({"steps": k, "wall_s": round(tw1 - tw0, 6),
+                                    "step_ms": round((tw1 - tw0) / k * 1000,
+                                                     3)})
+                if tel is not None:
+                    tel.metric(len(window_rows),
+                               {"bench_step_ms": window_rows[-1]["step_ms"],
+                                "bench_window_steps": k},
+                               phase="bench_window")
+            jax.block_until_ready(state["step"])
+        wall = sum(r["wall_s"] for r in window_rows)
+        steady_ms = statistics.median(r["step_ms"] for r in window_rows)
         loss = float(jax.device_get(m.get("loss", m.get("ce"))))
         result = {
             "steps": steps,
             "warmup": warmup,
             "setup_s": round(setup_s, 3),
             "compile_s": round(compile_s, 3),
-            "steady_step_ms": round(wall / steps * 1000, 3),
+            "steady_step_ms": round(steady_ms, 3),
+            "steady_step_ms_mean": round(wall / steps * 1000, 3),
+            "windows": window_rows,
             "steps_per_s": round(steps / wall, 3) if wall > 0 else 0.0,
             "final_loss": round(loss, 6),
             "prefetch": self.prefetch,
             "grad_accum": self.grad_accum,
-            # resilience fields — zero on a clean bench by construction
-            # (bench never rolls back or preempts); the schema guard in
-            # the bench CI job asserts exactly that
+            # a clean bench dispatches every step productively by
+            # construction (no rollback/preempt paths), so goodput is
+            # exactly 1.0 — the CI schema guard asserts it
+            "goodput": 1.0,
+            "steps_dispatched": steps,
             "rollback_count": 0,
             "retry_count": int(getattr(self.checkpointer,
                                        "retry_count", 0) or 0),
             "graceful_exit": False,
         }
+        from ..telemetry import accounting as ACC
+
+        flops = ACC.flops_per_train_step(self.model, self.loader,
+                                         self.grad_accum)
+        n_dev = int(self.mesh.devices.size) if self.mesh is not None else 1
+        if flops:
+            result["model_flops_per_step"] = flops
+            result["mfu"] = ACC.mfu(flops, steady_ms / 1000.0, n_dev)
         gb = getattr(self.loader, "global_batch", None)
         seq = getattr(getattr(self.loader, "dataset", None), "seq_len", None)
         if gb and seq:
             result["global_batch"] = int(gb)
             result["seq_len"] = int(seq)
-            result["tokens_per_s"] = int(gb * seq * steps / wall) if wall > 0 else 0
+            result["tokens_per_s"] = int(gb * seq / (steady_ms / 1000.0)) \
+                if steady_ms > 0 else 0
+        if tel is not None:
+            tel.metric(None, {"steady_step_ms": result["steady_step_ms"],
+                              "mfu": result.get("mfu"),
+                              "tokens_per_s": result.get("tokens_per_s"),
+                              "goodput": 1.0}, phase="bench_summary")
         return result
 
 

@@ -37,32 +37,15 @@ from .hlo_analysis import analyze as analyze_hlo
 
 
 def model_flops(cfg, shape) -> float:
-    """6·N_active·D (training) or 2·N_active·D (per-token inference)."""
-    from ..models import count_params
-    from ..models import build_model as _bm
+    """6·N_active·D (training) or 2·N_active·D (per-token inference).
 
-    import math
+    The estimate lives in :mod:`repro.telemetry.accounting` so dryrun's
+    roofline and the live MFU accounting share one numerator; this alias
+    keeps the historic dryrun import path working.
+    """
+    from ..telemetry.accounting import model_flops as _mf
 
-    model = _bm(cfg)
-    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    n_total = sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(params))
-    n_active = n_total
-    if cfg.moe:
-        # subtract inactive routed experts
-        per_layer_routed = 3 * cfg.d_model * cfg.moe.d_expert * cfg.moe.n_routed
-        n_moe_layers = cfg.n_layers - cfg.moe.n_dense_layers
-        active_frac = cfg.moe.top_k / cfg.moe.n_routed
-        n_active = n_total - int(
-            per_layer_routed * n_moe_layers * (1 - active_frac)
-        )
-    if shape.kind == "train":
-        tokens = shape.global_batch * shape.seq_len
-        return 6.0 * n_active * tokens, n_total, n_active
-    if shape.kind == "prefill":
-        tokens = shape.global_batch * shape.seq_len
-        return 2.0 * n_active * tokens, n_total, n_active
-    tokens = shape.global_batch  # decode: one token per sequence
-    return 2.0 * n_active * tokens, n_total, n_active
+    return _mf(cfg, shape)
 
 
 # ---------------------------------------------------------------------------

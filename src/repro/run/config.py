@@ -72,9 +72,11 @@ class TrainSettings:
     warmstart: Any = None         # mapping -> WarmstartSettings
     gym_key: str = "gym"          # top-level graph entry that is the gym
     resilience: Any = None        # mapping -> ResilienceSettings
+    telemetry: Any = None         # mapping/bool -> TelemetrySettings
 
     def __post_init__(self):
         self.resilience = _coerce_resilience("train", self.resilience)
+        self.telemetry = _coerce_telemetry("train", self.telemetry)
         if isinstance(self.resume, str):
             if self.resume != "auto":
                 raise RunError(f"run.train.resume must be true|false|auto, "
@@ -232,6 +234,79 @@ def _coerce_resilience(kind: str, value: Any) -> Any:
     return _coerce_block(kind, "resilience", value, ResilienceSettings)
 
 
+# ---------------------------------------------------------------------------
+# telemetry (observability) — shared by every kind (docs/observability.md)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ProfileSettings:
+    """``run.<kind>.telemetry.profile``: wrap a window of steps in
+    ``jax.profiler.trace``.  The artifact lands under
+    ``<output_dir>/profile`` (or ``dir``) and its path is recorded as a
+    telemetry event and in the result."""
+
+    start_step: int = 1
+    num_steps: int = 1
+    dir: str = ""                 # default: <output_dir>/profile
+
+    def __post_init__(self):
+        if self.start_step < 1 or self.num_steps < 1:
+            raise RunError(f"telemetry.profile start_step/num_steps must be "
+                           f">= 1, got {self.start_step}/{self.num_steps}")
+
+
+@dataclasses.dataclass
+class TelemetrySettings:
+    """``run.<kind>.telemetry``: the unified observability block.
+
+    Telemetry is ON by default: every run with an output directory
+    writes a schema-typed ``telemetry.jsonl`` (metric/span/event rows,
+    see :mod:`repro.telemetry.events`).  ``telemetry: false`` disables
+    it; ``sink`` picks a registry sink variant (``jsonl`` | ``csv`` |
+    ``stdout`` | ``multi`` | ``memory``); ``spans: false`` keeps metric
+    and event rows but drops the per-step / per-request phase spans;
+    ``profile`` arms the ``jax.profiler`` window."""
+
+    enabled: bool = True
+    sink: str = "jsonl"
+    path: str = ""                # file sinks; default <output_dir>/telemetry.*
+    prefix: str = ""              # stdout sink
+    sinks: Any = ()               # multi sink: nested {sink, path, prefix} rows
+    spans: bool = True
+    profile: Any = None           # mapping -> ProfileSettings
+
+    _KNOWN_SINKS = ("jsonl", "csv", "stdout", "multi", "memory")
+
+    def __post_init__(self):
+        if self.sink not in self._KNOWN_SINKS:
+            raise RunError(f"telemetry.sink must be one of "
+                           f"{list(self._KNOWN_SINKS)}, got {self.sink!r}")
+        if self.sink == "multi":
+            if not isinstance(self.sinks, (list, tuple)) or not self.sinks:
+                raise RunError("telemetry.sink 'multi' needs a non-empty "
+                               "'sinks' list")
+            self.sinks = [s if isinstance(s, dict) else {"sink": str(s)}
+                          for s in self.sinks]
+        else:
+            self.sinks = list(self.sinks or ())
+        if self.profile is not None and not isinstance(self.profile,
+                                                       ProfileSettings):
+            self.profile = _coerce_block("telemetry", "profile",
+                                         self.profile, ProfileSettings)
+
+
+def _coerce_telemetry(kind: str, value: Any) -> Any:
+    """``telemetry:`` block: absent/None/true => defaults (ON);
+    ``false`` => disabled (kept as an explicit settings object so the
+    choice survives document normalization and replay)."""
+    if isinstance(value, TelemetrySettings):
+        return value
+    if value is None or value is True:
+        return TelemetrySettings()
+    if value is False:
+        return TelemetrySettings(enabled=False)
+    return _coerce_block(kind, "telemetry", value, TelemetrySettings)
+
+
 @dataclasses.dataclass
 class LoRASettings:
     """``run.sft.lora`` / ``run.dpo.lora``: adapter injection knobs.
@@ -288,11 +363,13 @@ class SFTSettings:
     adapter_dir: str = ""         # default: <output_dir>/adapter
     export_merged: bool = False
     resilience: Any = None        # mapping -> ResilienceSettings
+    telemetry: Any = None         # mapping/bool -> TelemetrySettings
 
     def __post_init__(self):
         _validate_train_like("sft", self)
         self.lora = _coerce_lora("sft", self.lora)
         self.resilience = _coerce_resilience("sft", self.resilience)
+        self.telemetry = _coerce_telemetry("sft", self.telemetry)
 
 
 @dataclasses.dataclass
@@ -337,11 +414,13 @@ class DPOSettings:
     beta: float = 0.1
     onpolicy: Any = None          # mapping -> OnPolicySettings
     resilience: Any = None        # mapping -> ResilienceSettings
+    telemetry: Any = None         # mapping/bool -> TelemetrySettings
 
     def __post_init__(self):
         _validate_train_like("dpo", self)
         self.lora = _coerce_lora("dpo", self.lora)
         self.resilience = _coerce_resilience("dpo", self.resilience)
+        self.telemetry = _coerce_telemetry("dpo", self.telemetry)
         if self.beta <= 0:
             raise RunError(f"run.dpo.beta must be > 0, got {self.beta}")
         if self.onpolicy is not None and not isinstance(self.onpolicy,
@@ -381,8 +460,16 @@ class BenchSettings:
 
     steps: int = 20               # measured steps (post-warmup)
     warmup: int = 3               # steps between compile and measurement
+    windows: int = 5              # median-of-windows steady-state timing
     gym_key: str = "gym"          # top-level graph entry that is the gym
     bench_dir: str = "."          # where BENCH_<name>.json lands
+    telemetry: Any = None         # mapping/bool -> TelemetrySettings
+
+    def __post_init__(self):
+        if self.windows < 1:
+            raise RunError(f"run.bench.windows must be >= 1, "
+                           f"got {self.windows}")
+        self.telemetry = _coerce_telemetry("bench", self.telemetry)
 
 
 @dataclasses.dataclass
@@ -496,8 +583,10 @@ class ServeSettings:
     deadline_s: float = 0.0       # per-request wall deadline (0 = none)
     watchdog_s: float = 0.0       # no-progress tick watchdog (0 = off)
     faults: Any = ()              # chaos rows (serve_stall)
+    telemetry: Any = None         # mapping/bool -> TelemetrySettings
 
     def __post_init__(self):
+        self.telemetry = _coerce_telemetry("serve", self.telemetry)
         self.sampling = _coerce_block("serve", "sampling", self.sampling,
                                       SamplingSettings)
         self.workload = _coerce_block("serve", "workload", self.workload,

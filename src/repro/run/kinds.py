@@ -63,6 +63,19 @@ def _graph_get(graph: Dict[str, Any], key: str, what: str) -> Any:
     return graph[key]
 
 
+def _wire_evaluator(graph, gym, log) -> None:
+    """A top-level ``evaluator`` component in the graph becomes the gym's
+    eval hook (``eval_every`` on the gym controls cadence); an eval_fn set
+    programmatically wins."""
+    ev = graph.get("evaluator")
+    if ev is None or getattr(gym, "eval_fn", None) is not None \
+            or not hasattr(gym, "eval_fn"):
+        return
+    gym.eval_fn = ev
+    if not getattr(gym, "eval_every", 0):
+        log("evaluator wired but gym.eval_every is 0 — it will never fire")
+
+
 def _loader_tokens(gym, steps: int) -> Optional[int]:
     loader = getattr(gym, "loader", None)
     gb = getattr(loader, "global_batch", None)
@@ -70,6 +83,40 @@ def _loader_tokens(gym, steps: int) -> Optional[int]:
     if gb is None or seq is None:
         return None
     return steps * gb * seq
+
+
+def _build_telemetry(ctx, s):
+    """The run's unified telemetry recorder (None when ``telemetry:
+    false``).  File sinks land in the run's output dir and are gated like
+    result.json; without a writable target rows stay in memory but the
+    summary still reports."""
+    from ..telemetry import build_recorder
+
+    return build_recorder(
+        getattr(s, "telemetry", None),
+        output_dir=ctx.cfg.output_dir or "",
+        run=ctx.cfg.name, kind=ctx.cfg.kind, fingerprint=ctx.fingerprint,
+        write=bool(ctx.options.get("_write_files", True)),
+        log=ctx.log)
+
+
+def _build_profiler(ctx, s, recorder):
+    """ProfilerHook from ``telemetry.profile`` (None when unset)."""
+    p = getattr(getattr(s, "telemetry", None), "profile", None)
+    if p is None:
+        return None
+    if not ctx.options.get("_write_files", True):
+        return None  # a profiler trace is a filesystem artifact
+    out_dir = p.dir or (os.path.join(ctx.cfg.output_dir, "profile")
+                        if ctx.cfg.output_dir else "")
+    if not out_dir:
+        ctx.log("[telemetry] profile requested but the run has no "
+                "output_dir and no telemetry.profile.dir — skipping")
+        return None
+    from ..telemetry import ProfilerHook
+
+    return ProfilerHook(p.start_step, p.num_steps, out_dir,
+                        recorder=recorder, log=ctx.log)
 
 
 # ---------------------------------------------------------------------------
@@ -266,22 +313,43 @@ def _drive_gym(ctx, s, gym, before_run=None) -> Dict[str, Any]:
     # `steps` is the TOTAL budget: a resumed run trains only the remainder,
     # so interrupted + resumed reproduces the uninterrupted loss curve
     steps = max(0, s.steps - (resumed_from or 0))
+    rec = _build_telemetry(ctx, s)
+    prof = None
+    if rec is not None and hasattr(gym, "telemetry"):
+        gym.telemetry = rec
+        prof = _build_profiler(ctx, s, rec)
+        if prof is not None and hasattr(gym, "profiler"):
+            gym.profiler = prof
+        rec.event("run_start", steps=s.steps, steps_this_run=steps,
+                  resumed_from=resumed_from)
     t0 = time.time()
     try:
         out = gym.run(steps, state=state)
+    except BaseException:
+        if rec is not None:
+            rec.close()
+        raise
     finally:
         guard = getattr(gym, "preempt_guard", None)
         if guard is not None:
             guard.uninstall()  # a sweep drives many gyms in one process
     wall = time.time() - t0
     hist = out["history"]
+    dispatched = int(out.get("steps_dispatched", steps) or 0)
+    productive = int(out.get("productive_steps", steps) or 0)
+    from ..telemetry import accounting as ACC
+
     result: Dict[str, Any] = {
         "steps": s.steps,
         "steps_this_run": steps,
-        "wall_s": round(wall, 2),
+        "wall_s": round(wall, 6),
         "logged_points": len(hist),
         "history": hist,
         "_state": out["state"],
+        # telemetry accounting: productive steps over everything dispatched
+        # (rollback replays and preempt-discarded steps discount it)
+        "steps_dispatched": dispatched,
+        "goodput": ACC.goodput(productive, dispatched),
         # resilience accounting (zero/False on clean runs by construction)
         "rollback_count": int(out.get("rollbacks", 0)),
         # getattr chains: a custom-registry gym need not carry the
@@ -290,6 +358,16 @@ def _drive_gym(ctx, s, gym, before_run=None) -> Dict[str, Any]:
                                    "retry_count", 0) or 0),
         "graceful_exit": bool(out.get("preempted", False)),
     }
+    if steps > 0 and wall > 0:
+        flops = ACC.flops_per_train_step(getattr(gym, "model", None),
+                                         getattr(gym, "loader", None),
+                                         getattr(gym, "grad_accum", 1))
+        if flops:
+            n_dev = int(gym.mesh.devices.size) \
+                if getattr(gym, "mesh", None) is not None else 1
+            result["model_flops_per_step"] = flops
+            result["mfu"] = ACC.mfu(flops, wall / dispatched
+                                    if dispatched else wall / steps, n_dev)
     events = list(getattr(getattr(gym, "fault_injector", None),
                           "events", None) or [])
     events += out.get("events") or []
@@ -303,6 +381,14 @@ def _drive_gym(ctx, s, gym, before_run=None) -> Dict[str, Any]:
                 f"checkpoint committed; rerun with resume: auto")
     if events:
         result["events"] = events
+        if rec is not None:
+            for ev in events:
+                attrs = {k: v for k, v in ev.items()
+                         if k not in ("step", "name")}
+                rec.event("resilience/" + str(ev.get("kind",
+                                                     ev.get("reason",
+                                                            "event"))),
+                          step=ev.get("step"), **attrs)
         if ctx.cfg.output_dir and ctx.options.get("_write_files", True):
             path = os.path.join(ctx.cfg.output_dir, "events.jsonl")
             with open(path, "a") as f:
@@ -318,12 +404,30 @@ def _drive_gym(ctx, s, gym, before_run=None) -> Dict[str, Any]:
             result["_no_result_file"] = True
     if s.warmstart is not None:
         result["warmstart"] = dataclasses.asdict(s.warmstart)
-    if hist:  # steps < log_every yields an empty history — that is not an error
-        result["first_loss"] = float(hist[0]["loss"])
-        result["final_loss"] = float(hist[-1]["loss"])
+    # history rows now interleave train metrics and eval_* points: scan by
+    # key instead of trusting the ends (steps < log_every yields an empty
+    # history — that is not an error)
+    losses = [m for m in hist if "loss" in m]
+    if losses:
+        result["first_loss"] = float(losses[0]["loss"])
+        result["final_loss"] = float(losses[-1]["loss"])
+    evals = [m for m in hist
+             if any(k.startswith("eval_") for k in m)]
+    if evals:
+        result["eval_points"] = len(evals)
+        result["final_eval"] = {k: v for k, v in evals[-1].items()
+                                if k != "step"}
     tokens = _loader_tokens(gym, steps)
     if tokens is not None:
         result["tokens_per_s"] = int(tokens / wall) if wall > 0 else 0
+    if prof is not None and prof.artifact:
+        result["profile_trace"] = prof.artifact
+    if rec is not None:
+        rec.event("run_end", goodput=result["goodput"],
+                  rollbacks=result["rollback_count"],
+                  preempted=result["graceful_exit"])
+        result["telemetry"] = rec.summary()
+        rec.close()
     return result
 
 
@@ -333,7 +437,9 @@ def execute_train(ctx) -> Dict[str, Any]:
     if s.gym_key not in graph:
         raise RunError(f"resolved config has no {s.gym_key!r} entry; "
                        f"top-level entries: {sorted(graph)}")
-    result = _drive_gym(ctx, s, graph[s.gym_key])
+    gym = graph[s.gym_key]
+    _wire_evaluator(graph, gym, ctx.log)
+    result = _drive_gym(ctx, s, gym)
     result.pop("_state", None)
     return result
 
@@ -430,6 +536,7 @@ def execute_sft(ctx) -> Dict[str, Any]:
     graph = _resolve_graph(ctx)
     gym = _graph_get(graph, s.gym_key, "sft")
     lora_model = _inject_lora(gym, s.lora, ctx)
+    _wire_evaluator(graph, gym, ctx.log)
     result = _drive_gym(ctx, s, gym)
     state = result.pop("_state")
     result["lora"] = (dataclasses.asdict(s.lora)
@@ -512,8 +619,8 @@ def execute_dpo(ctx) -> Dict[str, Any]:
     result["beta"] = s.beta
     result["lora"] = (dataclasses.asdict(s.lora)
                       if s.lora is not None else None)
-    hist = result.get("history") or []
-    if hist and "margin" in hist[0]:
+    hist = [m for m in (result.get("history") or []) if "margin" in m]
+    if hist:
         result["first_margin"] = float(hist[0]["margin"])
         result["final_margin"] = float(hist[-1]["margin"])
         result["final_reward_accuracy"] = float(
@@ -531,7 +638,18 @@ def execute_bench(ctx) -> Dict[str, Any]:
     s: BenchSettings = ctx.cfg.settings
     graph = _resolve_graph(ctx)
     gym = _graph_get(graph, s.gym_key, "bench")
-    result = gym.bench(steps=s.steps, warmup=s.warmup)
+    rec = _build_telemetry(ctx, s)
+    if rec is not None and hasattr(gym, "telemetry"):
+        gym.telemetry = rec
+        rec.event("run_start", steps=s.steps, warmup=s.warmup,
+                  windows=s.windows)
+    try:
+        result = gym.bench(steps=s.steps, warmup=s.warmup,
+                           windows=s.windows)
+    except BaseException:
+        if rec is not None:
+            rec.close()
+        raise
     result["name"] = ctx.cfg.name
     arch = graph.get("arch")
     if arch is not None:
@@ -540,9 +658,15 @@ def execute_bench(ctx) -> Dict[str, Any]:
         result["remat"] = getattr(arch, "remat", None)
         result["scan_block_size"] = getattr(arch, "scan_block_size", None)
     ctx.log(f"bench {ctx.cfg.name!r}: compile {result['compile_s']:.2f}s, "
-            f"steady {result['steady_step_ms']:.1f} ms/step"
+            f"steady {result['steady_step_ms']:.1f} ms/step "
+            f"(median of {len(result.get('windows', []))} windows)"
             + (f", {result['tokens_per_s']} tok/s"
-               if "tokens_per_s" in result else ""))
+               if "tokens_per_s" in result else "")
+            + (f", mfu {result['mfu']:.3e}" if "mfu" in result else ""))
+    if rec is not None:
+        rec.event("run_end", steady_step_ms=result["steady_step_ms"])
+        result["telemetry"] = rec.summary()
+        rec.close()
     # the tracked artifact is a filesystem side effect: gated like result.json
     if s.bench_dir and ctx.options.get("_write_files", True):
         path = os.path.join(s.bench_dir, f"BENCH_{ctx.cfg.name}.json")
@@ -644,6 +768,7 @@ def execute_serve(ctx) -> Dict[str, Any]:
         from ..resilience import FaultInjector
 
         fault_injector = FaultInjector.from_config(s.faults)
+    rec = _build_telemetry(ctx, s)
     engine = ServeEngine(model, params, n_slots=s.n_slots, max_len=max_len,
                          mesh=mesh, plan=plan,
                          greedy=samp.temperature <= 0,
@@ -651,7 +776,8 @@ def execute_serve(ctx) -> Dict[str, Any]:
                          n_blocks=s.n_blocks, prefill_chunk=s.prefill_chunk,
                          prefix_cache=s.prefix_cache,
                          deadline_s=s.deadline_s, watchdog_s=s.watchdog_s,
-                         fault_injector=fault_injector, log=ctx.log)
+                         fault_injector=fault_injector, telemetry=rec,
+                         log=ctx.log)
     if w.prefix_len:
         trace = shared_prefix_trace(
             w.n_requests, model.cfg.vocab, prefix_len=w.prefix_len,
@@ -671,7 +797,15 @@ def execute_serve(ctx) -> Dict[str, Any]:
             f"{ts['gen_budget']}, span {ts['span_s']:.2f}s) over "
             f"{s.n_slots} slots (max_len {max_len}, "
             f"{'paged' if engine.paged else 'dense'} cache)")
-    result: Dict[str, Any] = engine.run(trace, realtime=w.realtime)
+    if rec is not None:
+        rec.event("run_start", n_requests=ts["n_requests"],
+                  n_slots=s.n_slots)
+    try:
+        result: Dict[str, Any] = engine.run(trace, realtime=w.realtime)
+    except BaseException:
+        if rec is not None:
+            rec.close()
+        raise
     result["arch"] = model.cfg.name
     # resilience fields per the BENCH_* schema (serving never rolls back
     # or checkpoints; a clean engine run reports zeros)
@@ -692,6 +826,11 @@ def execute_serve(ctx) -> Dict[str, Any]:
                                log=ctx.log)
         shim.pop("generated_ids", None)
         result["static_shim"] = shim
+    if rec is not None:
+        rec.event("run_end", completed=result.get("completed"),
+                  tok_s=result.get("tok_s"))
+        result["telemetry"] = rec.summary()
+        rec.close()
     # tracked artifact per the bench conventions (gated like result.json)
     if s.bench_dir and ctx.options.get("_write_files", True):
         bench = {k: v for k, v in result.items() if k != "requests"}
@@ -726,20 +865,35 @@ def execute_sweep(ctx) -> Dict[str, Any]:
     from ..sweep.report import load_records, write_report
     from ..sweep.runner import SweepRunner
 
+    from .config import _coerce_telemetry
+    from ..telemetry import build_recorder
+
     spec = build_sweep_spec(ctx.cfg, ctx.options.get("output_dir", ""))
     trials = spec.trials()
     ctx.log(f"sweep {spec.name!r}: {len(trials)} trials -> {spec.output_dir}")
-    runner = SweepRunner(spec, log=ctx.log)
-    records = runner.run(resume=not ctx.options.get("redo", False),
-                         max_trials=int(ctx.options.get("max_trials", 0)),
-                         retry_failed=bool(
-                             ctx.options.get("retry_failed", False)))
+    rec = build_recorder(
+        _coerce_telemetry("sweep", spec.telemetry),
+        output_dir=spec.output_dir or "", run=ctx.cfg.name, kind="sweep",
+        fingerprint=ctx.fingerprint,
+        write=bool(ctx.options.get("_write_files", True)), log=ctx.log)
+    if rec is not None:
+        rec.event("run_start", n_trials=len(trials), backend=spec.backend)
+    runner = SweepRunner(spec, log=ctx.log, telemetry=rec)
+    try:
+        records = runner.run(resume=not ctx.options.get("redo", False),
+                             max_trials=int(ctx.options.get("max_trials", 0)),
+                             retry_failed=bool(
+                                 ctx.options.get("retry_failed", False)))
+    except BaseException:
+        if rec is not None:
+            rec.close()
+        raise
     n_resumed = sum(1 for r in records if r.get("resumed"))
     n_failed = sum(1 for r in records if r.get("status") == "failed")
     ctx.log(f"done: {len(records)} records ({n_resumed} resumed, "
             f"{n_failed} failed)")
     summary = write_report(spec, load_records(spec.output_dir))
-    return {
+    result = {
         "sweep": spec.name,
         "backend": spec.backend,
         "objective_metric": spec.objective_metric,
@@ -752,6 +906,11 @@ def execute_sweep(ctx) -> Dict[str, Any]:
         "report": f"{spec.output_dir}/report.json",
         "sweep_output_dir": spec.output_dir,
     }
+    if rec is not None:
+        rec.event("run_end", n_records=len(records), n_failed=n_failed)
+        result["telemetry"] = rec.summary()
+        rec.close()
+    return result
 
 
 # ---------------------------------------------------------------------------

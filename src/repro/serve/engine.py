@@ -81,7 +81,7 @@ class ServeEngine:
                  n_blocks: int = 0, prefill_chunk: int = 0,
                  prefix_cache: bool = True,
                  deadline_s: float = 0.0, watchdog_s: float = 0.0,
-                 fault_injector=None,
+                 fault_injector=None, telemetry=None,
                  log: Optional[Callable[[str], None]] = None):
         """``greedy=True`` compiles a sampler-free decode tick — use it when
         EVERY request this engine will serve is greedy (the static shim, or
@@ -125,6 +125,9 @@ class ServeEngine:
         self.deadline_s = float(deadline_s)
         self.watchdog_s = float(watchdog_s)
         self.fault_injector = fault_injector
+        # optional TelemetryRecorder: per-request lifecycle spans
+        # (queued -> prefill -> decode) and a headline metric row per run
+        self.telemetry = telemetry
         self.log = log or (lambda msg: None)
         self.mesh, self.plan = mesh, plan
         supports_paged = model.supports_paged_cache()
@@ -383,6 +386,15 @@ class ServeEngine:
         cached_prompt_tokens = 0
         total_prompt_tokens = 0
         timeouts = 0
+        tel = self.telemetry
+        do_spans = tel is not None and getattr(tel, "spans", False)
+        # (t_admit_begin, t_first_token) per rid, absolute perf_counter
+        # readings — the span anchors emitted when the request retires
+        span_times: Dict[int, Any] = {}
+        # one occupancy sample per decode tick: queue depth, busy slots,
+        # and (paged) free pool blocks — the raw series behind the serve
+        # bench's queue-depth / slot-occupancy timeline
+        timeline: List[Dict[str, Any]] = []
         # deadlines cost a scan per loop iteration — skip it entirely for
         # the (default) deadline-free workload
         deadlines_on = self.deadline_s > 0 or any(
@@ -399,14 +411,35 @@ class ServeEngine:
 
         def retire(slot: int, r: Request, finish: str = "") -> None:
             stream = streams[r.rid]
+            t_ret = time.perf_counter()
             rows[r.rid].update(
                 n_gen=len(stream),
                 gen_ids=stream,
                 finish=finish or ("eos" if r.eos_id >= 0
                                   and stream[-1] == r.eos_id
                                   else "length"),
-                done_s=round(time.perf_counter() - t0, 6),
+                done_s=round(t_ret - t0, 6),
             )
+            if do_spans:
+                anchors = span_times.pop(r.rid, None)
+                if anchors is not None:
+                    t_adm, t_first = anchors
+                    t_arr = t0 + rows[r.rid]["arrival_s"]
+                    row = rows[r.rid]
+                    req = tel.span_row(
+                        "serve/request", t_arr, t_ret, rid=r.rid, slot=slot,
+                        prompt_len=r.prompt_len, n_gen=len(stream),
+                        finish=row["finish"])
+                    tel.span_row("serve/queued", t_arr, t_adm,
+                                 parent=req, rid=r.rid)
+                    tel.span_row("serve/prefill", t_adm, t_first,
+                                 parent=req, rid=r.rid,
+                                 cached_tokens=row.get("cached_tokens", 0),
+                                 chunks=row.get("prefill_chunks", 0))
+                    tel.span_row("serve/decode", t_first, t_ret,
+                                 parent=req, rid=r.rid)
+            else:
+                span_times.pop(r.rid, None)
             slot_req.pop(slot, None)
             free.append(slot)
             if self.paged:
@@ -448,6 +481,12 @@ class ServeEngine:
                 tpot.append(dt)
                 if bool(finished[slot]):
                     retire(slot, r)
+            if len(timeline) < 100_000:
+                sample = {"t_s": round(time.perf_counter() - t0, 6),
+                          "queue": len(pending), "busy": len(slot_req)}
+                if self.paged:
+                    sample["free_blocks"] = int(self._alloc.n_free)
+                timeline.append(sample)
 
         def admit_dense(r: Request) -> None:
             nonlocal cache, slots, prefill_s
@@ -465,7 +504,7 @@ class ServeEngine:
             tb = time.perf_counter()
             prefill_s += tb - ta
             finish_admission(r, slot, int(tok), bool(fin), tb - ta, tb,
-                             cached=0, n_chunks=1)
+                             cached=0, n_chunks=1, t_admit0=ta)
 
         def admit_paged(r: Request) -> bool:
             """Map pages, prefill the un-cached tail in fixed-size chunks
@@ -500,6 +539,7 @@ class ServeEngine:
                         f"requests in flight — pool too small")
                 return False        # wait for a retirement
             ta = time.perf_counter()
+            t_adm0 = ta             # admission begin (ta moves per chunk)
             for node in matched:
                 self._alloc.retain(node.block)
             blocks = [n.block for n in matched] + self._alloc.alloc(n_fresh)
@@ -545,23 +585,30 @@ class ServeEngine:
                 # private and frees at retire
                 self._radix.insert(prompt[:(P // bl) * bl], blocks)
             finish_admission(r, slot, tok, fin, tb - ta, tb,
-                             cached=S, n_chunks=n_chunks)
+                             cached=S, n_chunks=n_chunks, t_admit0=t_adm0)
             return True
 
         def finish_admission(r, slot, tok, fin, admit_s, tb, *, cached,
-                             n_chunks):
+                             n_chunks, t_admit0):
             arrival = r.arrival_s if realtime else 0.0
             ttft = tb - t0 - arrival
             ttfts.append(ttft)
             streams[r.rid] = [tok]
+            # queue_s is the span the request sat unadmitted (arrival ->
+            # admission begin): with prefill_s it decomposes TTFT into
+            # queueing vs compute (interleaved decode ticks during a
+            # chunked admission account for any remainder)
+            queue_s = max(0.0, (t_admit0 - t0) - arrival)
             rows[r.rid] = {
                 "id": r.rid, "slot": slot, "prompt_len": r.prompt_len,
                 "max_new": budgets[r.rid], "arrival_s": arrival,
                 "ttft_s": round(ttft, 6),
+                "queue_s": round(queue_s, 6),
                 "prefill_s": round(admit_s, 6),
                 "cached_tokens": cached,
                 "prefill_chunks": n_chunks,
             }
+            span_times[r.rid] = (t_admit0, tb)
             slot_req[slot] = r
             if fin:
                 retire(slot, r)
@@ -644,6 +691,10 @@ class ServeEngine:
             "decode_tok_s_full": int(decode_tok_s / util) if util > 0 else 0,
             "slot_utilization": round(util, 4),
             "ttft_s": percentiles(ttfts),
+            # TTFT split: time queued (arrival -> admission begin) vs time
+            # in prefill compute — from the per-request lifecycle anchors
+            "queue_s": percentiles([w["queue_s"] for w in admitted
+                                    if "queue_s" in w]),
             "tpot_ms": percentiles([t * 1000 for t in tpot]),
             # hit/cold split: prefix-cache hits should beat cold prefills on
             # both the queue-free admission time and end-to-end TTFT
@@ -655,6 +706,7 @@ class ServeEngine:
             "prefill_hit_s": percentiles([w["prefill_s"] for w in hit]),
             "prefill_cold_s": percentiles([w["prefill_s"] for w in cold]),
             "interleaved_decode_ticks": interleaved_ticks,
+            "timeline": timeline,
             "requests": [rows[rid] for rid in sorted(rows)],
         }
         if self.paged:
@@ -669,6 +721,19 @@ class ServeEngine:
                 "cached_blocks": int(self._radix.n_nodes),
                 "evictions": int(self._radix.evictions),
             }
+        if tel is not None:
+            headline = {
+                "tok_s": result["tok_s"],
+                "decode_tok_s": result["decode_tok_s"],
+                "slot_utilization": result["slot_utilization"],
+                "completed": result["completed"],
+                "ticks": ticks,
+            }
+            for key in ("ttft_s", "queue_s", "tpot_ms"):
+                p = result.get(key) or {}
+                if isinstance(p, dict) and "p50" in p:
+                    headline[f"{key}_p50"] = p["p50"]
+            tel.metric(None, headline, phase="serve_summary")
         self.log(
             f"engine: {result['n_requests']} requests, "
             f"{gen_tokens} tokens in {elapsed:.3f}s "

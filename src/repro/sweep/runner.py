@@ -85,7 +85,7 @@ def _gym_backend(spec: SweepSpec) -> Callable[..., Dict[str, Any]]:
             key: result[key]
             for key in ("final_loss", "first_loss", "tokens_per_s", "steps",
                         "wall_s", "final_margin", "first_margin",
-                        "final_reward_accuracy")
+                        "final_reward_accuracy", "mfu", "goodput")
             if key in result
         }
         if result.get("resumed_from") is not None:
@@ -165,9 +165,13 @@ class SweepRunner:
     """Executes every trial of a spec, persisting + resuming via JSONL."""
 
     def __init__(self, spec: SweepSpec,
-                 log: Optional[Callable[[str], None]] = None) -> None:
+                 log: Optional[Callable[[str], None]] = None,
+                 telemetry: Any = None) -> None:
         self.spec = spec
         self.log = log or (lambda msg: None)
+        # sweep-level TelemetryRecorder (repro.telemetry): one metric/event
+        # row per trial record, alongside the per-trial runs' own files
+        self.telemetry = telemetry
 
     # -- persistence --------------------------------------------------------
     def _records_path(self) -> Optional[str]:
@@ -316,7 +320,29 @@ class SweepRunner:
                      f"{record['error']}")
         record["wall_s"] = round(time.time() - t0, 2)
         self._append(record)
+        self._record_telemetry(trial, record)
         return record
+
+    def _record_telemetry(self, trial: Trial,
+                          record: Dict[str, Any]) -> None:
+        tel = self.telemetry
+        if tel is None:
+            return
+        status = record.get("status", "?")
+        if status == "ok":
+            # scalar metrics only (dryrun metrics carry nested mappings)
+            data = {k: v for k, v in (record.get("metrics") or {}).items()
+                    if isinstance(v, (int, float, str)) and
+                    not isinstance(v, bool)}
+            data["trial_wall_s"] = record["wall_s"]
+            tel.metric(trial.index, data, trial_id=trial.trial_id,
+                       status=status)
+        else:
+            tel.event(f"trial_{status}", step=trial.index,
+                      trial_id=trial.trial_id,
+                      error=record.get("error"),
+                      failure_kind=record.get("failure_kind"),
+                      skip_reason=record.get("skip_reason"))
 
     def _retry_policy(self):
         """The spec-level ``retry:`` block as a RetryPolicy (None = off)."""

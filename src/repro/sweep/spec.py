@@ -232,6 +232,7 @@ class SweepSpec:
     gym_key: str = "gym"
     create_missing: bool = False
     retry: Any = None             # mapping -> in-trial RetryPolicy kwargs
+    telemetry: Any = None         # mapping/bool -> sweep-level TelemetrySettings
 
     def __post_init__(self) -> None:
         if self.retry is not None and not isinstance(self.retry, dict):
@@ -258,7 +259,7 @@ class SweepSpec:
         doc = dict(doc.get("sweep", doc))  # tolerate a top-level `sweep:` key
         known = {"name", "backend", "base", "base_config", "axes", "output_dir",
                  "objective", "seeds", "seed_path", "steps", "gym_key",
-                 "create_missing", "retry"}
+                 "create_missing", "retry", "telemetry"}
         unknown = set(doc) - known
         if unknown:
             raise SweepError(f"unknown sweep keys {sorted(unknown)}; "
@@ -290,6 +291,7 @@ class SweepSpec:
             gym_key=doc.get("gym_key", "gym"),
             create_missing=bool(doc.get("create_missing", False)),
             retry=doc.get("retry"),
+            telemetry=doc.get("telemetry"),
         )
         if "seed_path" in doc:
             kwargs["seed_path"] = doc["seed_path"]

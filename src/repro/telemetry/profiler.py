@@ -1,0 +1,80 @@
+"""Profiler hook: wrap a configured window of gym steps in
+``jax.profiler.trace`` and record the artifact path as telemetry.
+
+Configured declaratively on the Run API:
+
+    telemetry:
+      profile: {start_step: 5, num_steps: 2}
+
+The hook is step-driven (``step_begin``/``step_end`` from the gym loop)
+so it composes with resume/warmstart: a run resumed past ``start_step``
+starts tracing at its first executed step at or beyond it.  Profiler
+failures (unsupported backend, missing tensorboard plugin) are recorded
+as an ``event`` row and never fail the run.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+
+class ProfilerHook:
+    def __init__(self, start_step: int, num_steps: int, out_dir: str,
+                 recorder=None, log=None) -> None:
+        self.start_step = max(1, int(start_step))
+        self.num_steps = max(1, int(num_steps))
+        self.out_dir = str(out_dir)
+        self.recorder = recorder
+        self.log = log
+        self.active = False
+        self.done = False
+        self.artifact: Optional[str] = None
+        self.error = ""
+        self._stop_after = 0
+
+    def step_begin(self, step: int) -> None:
+        if self.done or self.active or step < self.start_step:
+            return
+        import jax
+
+        try:
+            os.makedirs(self.out_dir, exist_ok=True)
+            jax.profiler.start_trace(self.out_dir)
+        except Exception as e:  # backend without profiler support
+            self.done = True
+            self.error = f"{type(e).__name__}: {e}"
+            if self.recorder is not None:
+                self.recorder.event("profile_error", step=step,
+                                    error=self.error)
+            if self.log:
+                self.log(f"[telemetry] profiler unavailable: {self.error}")
+            return
+        self.active = True
+        self._stop_after = step + self.num_steps - 1
+        if self.recorder is not None:
+            self.recorder.event("profile_start", step=step,
+                                path=self.out_dir)
+
+    def step_end(self, step: int) -> None:
+        if not self.active or step < self._stop_after:
+            return
+        self._stop()
+        if self.recorder is not None:
+            self.recorder.event("profile_stop", step=step,
+                                path=self.out_dir)
+
+    def close(self) -> None:
+        """Stop an open trace (preemption/rollback ended the run early)."""
+        if self.active:
+            self._stop()
+
+    def _stop(self) -> None:
+        import jax
+
+        try:
+            jax.profiler.stop_trace()
+            self.artifact = self.out_dir
+        except Exception as e:
+            self.error = f"{type(e).__name__}: {e}"
+        self.active = False
+        self.done = True
