@@ -20,7 +20,7 @@ from ..models.base import ArchConfig, MLAConfig, MoEConfig, SSMConfig, Model
 from ..models.stacked import REMAT_VARIANTS, RematPolicy
 from ..optim import schedules as SCHED
 from ..optim.adamw import AdamW
-from ..sharding.plans import ShardingPlan, make_plan
+from ..sharding.plans import ShardingPlan, custom_plan, make_plan
 from . import interfaces as IF
 from .gym import Gym
 
@@ -79,10 +79,15 @@ def register_all() -> None:
 
     # -- sharding plans -------------------------------------------------------
     for name in ("ddp", "fsdp", "hsdp", "fsdp_tp", "hsdp_tp", "fsdp_tp_ep",
-                 "hsdp_tp_ep", "serve_ep"):
+                 "hsdp_tp_ep", "serve_ep", "pp2_fsdp", "pp2_fsdp_tp",
+                 "pp2_fsdp_tp_ep"):
         _reg("sharding_plan", name,
              (lambda n: (lambda multi_pod=False: make_plan(n, multi_pod)))(name),
              ShardingPlan)
+    # declarative custom plans: validated ShardingPlan fields straight from
+    # YAML (`plan: {tp: true, pp: 2, ...}`), so sweeps can grid over novel
+    # compositions without touching the catalog
+    _reg("sharding_plan", "custom", lambda **kw: custom_plan(kw), ShardingPlan)
 
     # -- meshes ----------------------------------------------------------------
     # Every variant returns a MeshProvider (build() -> mesh, lazily) — no more

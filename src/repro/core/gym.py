@@ -576,6 +576,13 @@ class Gym:
             result["seq_len"] = int(seq)
             result["tokens_per_s"] = int(gb * seq / (steady_ms / 1000.0)) \
                 if steady_ms > 0 else 0
+        if self.plan is not None and hasattr(self.plan, "describe"):
+            from ..sharding import plans as PL
+
+            result["plan"] = self.plan.describe()
+            result["pipeline"] = PL.pipeline_info(
+                self.plan, self.mesh,
+                int(getattr(self.loader, "global_batch", 0) or 0))
         if tel is not None:
             tel.metric(None, {"steady_step_ms": result["steady_step_ms"],
                               "mfu": result.get("mfu"),

@@ -208,6 +208,10 @@ def compile_run(cfg, shape, mesh, plan=None, *, grad_accum: int = 1,
         "lower_s": round(t_lower, 1),
         "compile_s": round(t_compile, 1),
         "sharding_warnings": warnings,
+        # per-plan pipeline cost block (MoFa-style observable bubble term;
+        # the `tune` run kind calibrates against these + collective bytes)
+        "pipeline": PL.pipeline_info(plan, mesh, shape.global_batch
+                                     if shape.kind == "train" else 0),
     }
     if mem is not None:
         for attr in ("temp_size_in_bytes", "argument_size_in_bytes",

@@ -26,13 +26,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.sharding.Mesh(dev, axes)
 
 
-def make_local_mesh(dp: int = 1, tp: int = 1):
-    """Small mesh over whatever devices exist (tests / smoke runs)."""
+def make_local_mesh(dp: int = 1, tp: int = 1, pp: int = 1):
+    """Small mesh over whatever devices exist (tests / smoke runs).
+
+    ``pp > 1`` prepends a ``pipe`` axis — the 3D ``(pipe, data, model)``
+    mesh pipelined plans compose over; the 2-axis shape is unchanged
+    otherwise so existing call sites keep their layouts.
+    """
     import numpy as np
 
-    n = dp * tp
+    n = dp * tp * pp
     devices = jax.devices()
     assert len(devices) >= n, f"need {n} devices, have {len(devices)}"
+    if pp > 1:
+        dev = np.asarray(devices[:n]).reshape((pp, dp, tp))
+        return jax.sharding.Mesh(dev, ("pipe", "data", "model"))
     dev = np.asarray(devices[:n]).reshape((dp, tp))
     return jax.sharding.Mesh(dev, ("data", "model"))
 
@@ -80,12 +88,12 @@ class SingleDeviceMesh(MeshProvider):
 
 
 class LocalMesh(MeshProvider):
-    def __init__(self, dp: int = 1, tp: int = 1) -> None:
+    def __init__(self, dp: int = 1, tp: int = 1, pp: int = 1) -> None:
         super().__init__()
-        self.dp, self.tp = int(dp), int(tp)
+        self.dp, self.tp, self.pp = int(dp), int(tp), int(pp)
 
     def _make(self):
-        return make_local_mesh(self.dp, self.tp)
+        return make_local_mesh(self.dp, self.tp, self.pp)
 
 
 class ProductionMesh(MeshProvider):

@@ -128,6 +128,9 @@ class MeshContext:
     tp_axis: Optional[str] = None      # "model" (None => no TP / no EP)
     ep_enabled: bool = False           # route MoE through the shard_map EP path
     ep_axes: Tuple[str, ...] = ("model",)  # mesh axes experts shard over
+    pp: int = 1                        # pipeline stage count (1 => unpipelined)
+    pipe_axis: Optional[str] = None    # mesh axis the stage dim shards over
+    n_micro: int = 0                   # microbatches (0 => 2*pp default)
 
     @property
     def dp_size(self) -> int:

@@ -344,6 +344,13 @@ class DecoderLM(B.Model):
 
     def backbone(self, params, x, positions, mesh_ctx, storage_axes=()):
         cfg = self.cfg
+        if mesh_ctx is not None and mesh_ctx.pp > 1 and mesh_ctx.pipe_axis:
+            if cfg.arch_type == "hybrid":
+                raise ValueError(
+                    "pipeline parallelism does not compose with the "
+                    "weight-shared hybrid stack; use an unpipelined plan")
+            return self._backbone_pipelined(params, x, positions, mesh_ctx,
+                                            storage_axes)
         aux_total = jnp.zeros((), jnp.float32)
         if cfg.arch_type == "hybrid":
             # scan segments: (attn_every - 1) ssm layers + weight-shared attn
@@ -360,6 +367,57 @@ class DecoderLM(B.Model):
             )
             aux_total = aux_total + aux
         return x, aux_total
+
+    def _backbone_pipelined(self, params, x, positions, mesh_ctx,
+                            storage_axes=()):
+        """GPipe the backbone: each stack's ``[L, ...]`` params are viewed
+        as ``[S, L/S, ...]`` stages (the staged view is the stored pipe-
+        sharded layout, so the reshape is device-local), the batch is split
+        into M microbatches, and each stage body is exactly the existing
+        :class:`Stacked` fold over its local layers — remat and
+        ``scan_block_size`` compose unchanged. Per-layer compute is
+        batch-elementwise, so the result is mathematically identical to
+        the sequential backbone; the schedule only changes the order.
+        Aux losses (router balance) ride the pipeline carry per microbatch.
+        Heterogeneous stacks (dense prelude + MoE) are pipelined one after
+        another, preserving sequential layer order."""
+        from ..sharding import pipeline as PIPE
+
+        cfg = self.cfg
+        n_stages = mesh_ctx.pp
+        stacks = self._stacks()
+        for name, _, idxs in stacks:
+            if len(idxs) % n_stages:
+                raise ValueError(
+                    f"stack {name!r} has {len(idxs)} layers — not divisible "
+                    f"into pp={n_stages} stages")
+        bsz = x.shape[0]
+        n_micro = PIPE.effective_n_micro(mesh_ctx.n_micro, n_stages, bsz)
+        carry = {
+            "x": PIPE.microbatch(x, n_micro),
+            "aux": jnp.zeros((n_micro,), jnp.float32),
+        }
+        for name, kind, idxs in stacks:
+            staged = PIPE.stage_split(params[name], n_stages)
+            per_stage = len(idxs) // n_stages
+
+            def stage_fn(sp, c, kind=kind, per_stage=per_stage):
+                def body(cr, lp):
+                    xx, aux = cr
+                    xx, a = apply_block(cfg, kind, lp, xx, positions,
+                                        mesh_ctx, storage_axes)
+                    return (xx, aux + a)
+
+                stack = ST.Stacked(body, per_stage,
+                                   block_size=cfg.scan_block_size,
+                                   remat=cfg.remat)
+                xx, aux = stack.fold(sp, (c["x"], c["aux"]))
+                return {"x": xx, "aux": aux}
+
+            carry = PIPE.pipeline_apply(
+                stage_fn, staged, carry, mesh_ctx.mesh,
+                pipe_axis=mesh_ctx.pipe_axis, dp_axes=mesh_ctx.dp_axes)
+        return PIPE.unmicrobatch(carry["x"]), jnp.sum(carry["aux"])
 
     def logits(self, params, x, mesh_ctx=None):
         cfg = self.cfg

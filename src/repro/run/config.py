@@ -678,6 +678,31 @@ class RunConfig:
         return dict(self.settings)
 
 
+_PLAN_KEYS = {"plan", "sharding_plan"}
+_NODE_KEYS = {"component_key", "instance_key", "pass_type"}
+
+
+def _normalize_inline_plans(obj: Any) -> Any:
+    """Declarative custom plans: a ``plan:`` / ``sharding_plan:`` entry whose
+    value is a plain field mapping (``{tp: true, pp: 2, ...}``) becomes a
+    ``sharding_plan/custom`` component node, so run YAML can express novel
+    plan compositions inline — not only catalog names.  Field validation
+    happens in :func:`repro.sharding.plans.custom_plan` at resolve time
+    (this module stays import-light; no jax at parse time)."""
+    if isinstance(obj, list):
+        return [_normalize_inline_plans(v) for v in obj]
+    if not isinstance(obj, dict):
+        return obj
+    out: Dict[str, Any] = {}
+    for k, v in obj.items():
+        if k in _PLAN_KEYS and isinstance(v, dict) and not (_NODE_KEYS & set(v)):
+            out[k] = {"component_key": "sharding_plan",
+                      "variant_key": "custom", "config": dict(v)}
+        else:
+            out[k] = _normalize_inline_plans(v)
+    return out
+
+
 def _infer_kind(doc: Dict[str, Any]) -> Optional[str]:
     """Classify a legacy document with no ``run:`` section."""
     if "sweep" in doc or "axes" in doc or "base" in doc or "base_config" in doc:
@@ -743,6 +768,10 @@ def parse_run_doc(doc: Dict[str, Any], *, kind: Optional[str] = None,
     settings = _coerce_settings(doc_kind, run_sec.get(doc_kind))
 
     graph = doc  # whatever is not the run section is the component graph
+    if doc_kind != "sweep":
+        # (sweep bodies are specs, not graphs — their materialized base
+        # configs pass through here again per trial)
+        graph = _normalize_inline_plans(graph)
     if doc_kind == "sweep":
         # the sweep spec may live in run.sweep or as the document body
         sweep_doc = run_sec.get("sweep") or graph

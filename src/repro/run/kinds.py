@@ -368,6 +368,15 @@ def _drive_gym(ctx, s, gym, before_run=None) -> Dict[str, Any]:
             result["model_flops_per_step"] = flops
             result["mfu"] = ACC.mfu(flops, wall / dispatched
                                     if dispatched else wall / steps, n_dev)
+    plan = getattr(gym, "plan", None)
+    if plan is not None and hasattr(plan, "describe"):
+        from ..sharding import plans as PL
+
+        result["plan"] = plan.describe()
+        result["pipeline"] = PL.pipeline_info(
+            plan, getattr(gym, "mesh", None),
+            int(getattr(getattr(gym, "loader", None), "global_batch", 0)
+                or 0))
     events = list(getattr(getattr(gym, "fault_injector", None),
                           "events", None) or [])
     events += out.get("events") or []

@@ -34,6 +34,9 @@ class ShardingPlan:
     ep: bool = False                       # expert parallelism over `model`
     ep_storage_axes: Tuple[str, ...] = ()  # expert-weight storage sharding
     ep_axes: Tuple[str, ...] = ("model",)  # mesh axes the expert dim shards over
+    pp: int = 1                            # pipeline stages over `pipe_axis`
+    pipe_axis: str = "pipe"                # mesh axis the stage dim shards over
+    n_micro: int = 0                       # microbatches (0 -> 2*pp default)
 
     def describe(self) -> str:
         parts = [f"dp={','.join(self.dp_axes)}"]
@@ -43,10 +46,22 @@ class ShardingPlan:
             parts.append("tp=model")
         if self.ep:
             parts.append(
-                "ep=model" + (f"+storage={','.join(self.ep_storage_axes)}"
-                              if self.ep_storage_axes else "")
+                "ep=" + ",".join(self.ep_axes)
+                + (f"+storage={','.join(self.ep_storage_axes)}"
+                   if self.ep_storage_axes else "")
             )
+        if self.pp > 1:
+            parts.append(f"pp={self.pp}@{self.pipe_axis}"
+                         f"(m={self.n_micro or 2 * self.pp})")
         return f"{self.name}({'; '.join(parts)})"
+
+    def effective_n_micro(self, global_batch: int = 0) -> int:
+        """Microbatch count actually used by the schedule: ``n_micro`` (or
+        the ``2*pp`` default) reduced to the largest divisor of the global
+        batch so every microbatch is equal-sized."""
+        from . import pipeline as PIPE
+
+        return PIPE.effective_n_micro(self.n_micro, self.pp, global_batch)
 
 
 def make_plan(name: str, multi_pod: bool = False) -> ShardingPlan:
@@ -80,10 +95,68 @@ def make_plan(name: str, multi_pod: bool = False) -> ShardingPlan:
             "serve_ep", tp=True, fsdp_axes=(), dp_axes=("data",), ep=True,
             ep_storage_axes=(), ep_axes=pod + ("data", "model"),
         ),
+        # 3D: pipeline stages x FSDP (x TP x EP). The stage dim rides the
+        # `pipe` mesh axis; FSDP/TP shard each stage's slice as usual.
+        "pp2_fsdp": ShardingPlan("pp2_fsdp", fsdp_axes=dp, dp_axes=dp, pp=2),
+        "pp2_fsdp_tp": ShardingPlan(
+            "pp2_fsdp_tp", tp=True, fsdp_axes=dp, dp_axes=dp, pp=2),
+        "pp2_fsdp_tp_ep": ShardingPlan(
+            "pp2_fsdp_tp_ep", tp=True, fsdp_axes=dp, dp_axes=dp, ep=True,
+            ep_storage_axes=("data",), pp=2,
+        ),
     }
     if name not in plans:
         raise ValueError(f"unknown plan {name!r}; available: {sorted(plans)}")
     return plans[name]
+
+
+_PLAN_FIELDS = {f.name: f for f in dataclasses.fields(ShardingPlan)}
+_AXIS_FIELDS = {"fsdp_axes", "dp_axes", "ep_storage_axes", "ep_axes"}
+
+
+def custom_plan(spec: Dict[str, Any]) -> ShardingPlan:
+    """Build a validated :class:`ShardingPlan` from a field mapping — the
+    declarative `plan: {tp: true, pp: 2, ...}` form in run YAML.  A bare
+    string is a catalog lookup, so sweeps can grid over both forms."""
+    if isinstance(spec, str):
+        return make_plan(spec)
+    if isinstance(spec, ShardingPlan):
+        return spec
+    if not isinstance(spec, dict):
+        raise ValueError(f"plan spec must be a name or mapping, got {type(spec)}")
+    kw: Dict[str, Any] = dict(spec)
+    unknown = set(kw) - set(_PLAN_FIELDS)
+    if unknown:
+        raise ValueError(
+            f"unknown plan field(s) {sorted(unknown)}; valid: "
+            f"{sorted(_PLAN_FIELDS)}")
+    for k in _AXIS_FIELDS & set(kw):
+        v = kw[k]
+        if isinstance(v, str):
+            v = (v,)
+        if not (isinstance(v, (list, tuple))
+                and all(isinstance(a, str) for a in v)):
+            raise ValueError(f"plan.{k} must be a list of mesh-axis names, "
+                             f"got {kw[k]!r}")
+        kw[k] = tuple(v)
+    for k in ("tp", "ep"):
+        if k in kw and not isinstance(kw[k], bool):
+            raise ValueError(f"plan.{k} must be a bool, got {kw[k]!r}")
+    for k in ("pp", "n_micro"):
+        if k in kw:
+            if not isinstance(kw[k], int) or isinstance(kw[k], bool) or kw[k] < 0:
+                raise ValueError(f"plan.{k} must be a non-negative int, "
+                                 f"got {kw[k]!r}")
+    if kw.get("pp", 1) < 1:
+        raise ValueError("plan.pp must be >= 1")
+    if "pipe_axis" in kw and not isinstance(kw["pipe_axis"], str):
+        raise ValueError(f"plan.pipe_axis must be a str, got {kw['pipe_axis']!r}")
+    kw.setdefault("name", "custom")
+    plan = ShardingPlan(**kw)
+    if plan.pp > 1 and plan.pipe_axis in plan.dp_axes + plan.fsdp_axes:
+        raise ValueError(
+            f"plan.pipe_axis {plan.pipe_axis!r} collides with dp/fsdp axes")
+    return plan
 
 
 def default_plan_for(cfg: B.ArchConfig, multi_pod: bool = False) -> ShardingPlan:
@@ -112,6 +185,19 @@ def leaf_spec(plan: ShardingPlan, mesh: Mesh, shape: Tuple[int, ...],
     assert len(shape) == len(logical), f"{path}: {shape} vs {logical}"
     spec: List[Any] = [None] * len(shape)
     tp_size = mesh.shape.get("model", 1)
+
+    # pipeline stages: the stacked LAYER dim is split into `pp` contiguous
+    # chunks over the pipe axis — per device this IS the [S, L/S, ...]
+    # staged layout, while the stored tree keeps its plan-independent
+    # [L, ...] shape (elastic restore needs no reshape across plans)
+    if plan.pp > 1 and plan.pipe_axis in mesh.shape and B.LAYER in logical:
+        l_dim = logical.index(B.LAYER)
+        pp_size = mesh.shape[plan.pipe_axis]
+        if shape[l_dim] % pp_size == 0 and shape[l_dim] >= pp_size:
+            spec[l_dim] = plan.pipe_axis
+        elif warnings is not None:
+            warnings.append(
+                f"{path}: layers {shape[l_dim]} !% pp {pp_size} -> unstaged")
 
     is_expert = B.EXPERTS in logical
     if plan.ep and is_expert:
@@ -283,10 +369,41 @@ def train_state_shardings(plan: ShardingPlan, mesh: Mesh, model,
 
 
 def mesh_context(plan: ShardingPlan, mesh: Mesh) -> B.MeshContext:
+    # pipeline is active only when the mesh actually carries the pipe axis
+    # (a pp plan on a data x model mesh degrades to its unpipelined core,
+    # matching how TP/EP degrade on a 1-wide model axis)
+    pp = 1
+    if plan.pp > 1 and plan.pipe_axis in mesh.shape:
+        pp = mesh.shape[plan.pipe_axis]
+        if pp != plan.pp:
+            raise ValueError(
+                f"plan {plan.name!r} wants pp={plan.pp} but mesh axis "
+                f"{plan.pipe_axis!r} has {pp} devices")
     return B.MeshContext(
         mesh=mesh,
         dp_axes=plan.dp_axes,
         tp_axis="model" if (plan.tp or plan.ep) else None,
         ep_enabled=plan.ep,
         ep_axes=plan.ep_axes,
+        pp=pp,
+        pipe_axis=plan.pipe_axis if pp > 1 else None,
+        n_micro=plan.n_micro,
     )
+
+
+def pipeline_info(plan: ShardingPlan, mesh: Optional[Mesh] = None,
+                  global_batch: int = 0) -> Dict[str, Any]:
+    """Analytic pipeline telemetry for results/BENCH rows: stage count,
+    effective microbatches, and the GPipe bubble fraction."""
+    from . import pipeline as PIPE
+
+    pp = plan.pp
+    if mesh is None or plan.pipe_axis not in mesh.shape:
+        pp = 1
+    m = plan.effective_n_micro(global_batch) if pp > 1 else 1
+    return {
+        "pp": pp,
+        "pipe_axis": plan.pipe_axis if pp > 1 else None,
+        "n_micro": m,
+        "bubble_fraction": PIPE.bubble_fraction(pp, m),
+    }

@@ -30,7 +30,17 @@ def compute_loss(model, params, batch, mesh_ctx=None, storage_axes=(),
 
 def make_train_step(model, optimizer, mesh_ctx: Optional[B.MeshContext] = None,
                     storage_axes: Tuple[str, ...] = (), grad_accum: int = 1):
-    """Returns train_step(state, batch) -> (state, metrics)."""
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    When ``mesh_ctx.pp > 1`` the model's backbone runs the pipelined
+    stage/microbatch schedule internally (``sharding.pipeline``); the loss
+    is still computed once over the full (re-assembled) batch, so
+    ``jax.grad`` transposes the schedule into the pipelined backward and
+    the pipeline's per-microbatch gradient contributions accumulate inside
+    autodiff. ``grad_accum`` composes orthogonally on top: each accum
+    chunk is itself pipelined, and the explicit accumulation below keeps
+    the ≥f32 carry either way."""
+    from ..sharding import pipeline as PIPE
 
     def loss_fn(params, batch):
         return compute_loss(model, params, batch, mesh_ctx, storage_axes)
@@ -46,11 +56,7 @@ def make_train_step(model, optimizer, mesh_ctx: Optional[B.MeshContext] = None,
                 msum = jax.tree_util.tree_map(jnp.add, msum, metrics)
                 return (gsum, msum), None
 
-            mbs = jax.tree_util.tree_map(
-                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
-                                    + x.shape[1:]),
-                batch,
-            )
+            mbs = PIPE.microbatch(batch, grad_accum)
             # accumulator structure comes from what value_and_grad actually
             # produces (eval_shape), but gradients accumulate in >= f32: a
             # bf16 scan carry would compound 8-mantissa-bit rounding every

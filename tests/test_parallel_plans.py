@@ -1,0 +1,289 @@
+"""Composed 3D parallelism: pp × fsdp × tp (× ep for MoE) plans produce the
+same loss trajectory as the unpipelined reference, and the plan algebra
+(pp fields, staged leaf specs, declarative custom plans) holds up.
+
+Multi-device cases run in a subprocess on a forced-8-device CPU mesh
+(device count is locked at first jax init)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.models import base as B
+from repro.run.config import parse_run_doc
+from repro.sharding import pipeline as PIPE
+from repro.sharding import plans as PL
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+# ---------------------------------------------------------------------------
+# plan schema / leaf specs
+# ---------------------------------------------------------------------------
+def test_pp_plan_catalog_and_describe():
+    plan = PL.make_plan("pp2_fsdp_tp_ep")
+    assert plan.pp == 2 and plan.tp and plan.ep and plan.fsdp_axes
+    d = plan.describe()
+    assert "pp=2@pipe" in d and "tp=model" in d and "ep=" in d
+
+
+def test_leaf_spec_stages_layer_dim_over_pipe():
+    mesh = _FakeMesh({"pipe": 2, "data": 2, "model": 2})
+    plan = PL.make_plan("pp2_fsdp_tp")
+    # stacked leaf [L, d_model, d_ff]: LAYER over pipe, TP on d_ff, FSDP on
+    # the largest remaining dim
+    spec = PL.leaf_spec(plan, mesh, (8, 64, 256), (B.LAYER, B.D_MODEL, B.D_FF))
+    assert spec[0] == "pipe"
+    assert spec[2] == "model"
+    assert spec[1] == "data"
+    # indivisible layer count -> unstaged, warning recorded
+    warns = []
+    spec = PL.leaf_spec(plan, mesh, (3, 64, 256), (B.LAYER, B.D_MODEL, B.D_FF),
+                        warns, "blocks")
+    assert spec[0] is None and any("pp" in w for w in warns)
+    # a pipe-less mesh leaves the layer dim alone (plan degrades gracefully)
+    spec = PL.leaf_spec(plan, _FakeMesh({"data": 4, "model": 2}),
+                        (8, 64, 256), (B.LAYER, B.D_MODEL, B.D_FF))
+    assert spec[0] is None
+
+
+def test_leaf_spec_expert_leaves_stage_over_pipe_too():
+    mesh = _FakeMesh({"pipe": 2, "data": 2, "model": 2})
+    plan = PL.make_plan("pp2_fsdp_tp_ep")
+    spec = PL.leaf_spec(plan, mesh, (4, 8, 64, 32),
+                        (B.LAYER, B.EXPERTS, B.D_MODEL, B.D_EXPERT))
+    assert spec[0] == "pipe"      # stage dim
+    assert spec[1] == "model"     # EP over model
+    assert spec[2] == "data"      # storage sharding
+
+
+def test_custom_plan_validation():
+    plan = PL.custom_plan({"tp": True, "fsdp_axes": ["data"], "pp": 2,
+                           "n_micro": 4})
+    assert plan.name == "custom" and plan.pp == 2 and plan.n_micro == 4
+    assert PL.custom_plan("fsdp").name == "fsdp"      # catalog passthrough
+    with pytest.raises(ValueError, match="unknown plan field"):
+        PL.custom_plan({"tensor_parallel": True})
+    with pytest.raises(ValueError, match="must be a bool"):
+        PL.custom_plan({"tp": "yes"})
+    with pytest.raises(ValueError, match="non-negative int"):
+        PL.custom_plan({"pp": -1})
+    with pytest.raises(ValueError, match="mesh-axis names"):
+        PL.custom_plan({"fsdp_axes": [1, 2]})
+    with pytest.raises(ValueError, match="collides"):
+        PL.custom_plan({"pp": 2, "pipe_axis": "data"})
+
+
+def test_mesh_context_pp_fields_and_mismatch():
+    import jax
+    import numpy as np
+
+    # a real 1-device mesh spelled (data, model): pp plan degrades
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                             ("data", "model"))
+    ctx = PL.mesh_context(PL.make_plan("pp2_fsdp"), mesh)
+    assert ctx.pp == 1 and ctx.pipe_axis is None
+    info = PL.pipeline_info(PL.make_plan("pp2_fsdp"), mesh, 8)
+    assert info["pp"] == 1 and info["bubble_fraction"] == 0.0
+    # pipe axis present but wrong extent: loud error, not silent misuse
+    mesh1 = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1, 1),
+        ("pipe", "data", "model"))
+    with pytest.raises(ValueError, match="pp=2"):
+        PL.mesh_context(PL.make_plan("pp2_fsdp"), mesh1)
+
+
+def test_pipeline_info_reports_bubble():
+    plan = PL.make_plan("pp2_fsdp")
+    mesh = _FakeMesh({"pipe": 2, "data": 4})
+    info = PL.pipeline_info(plan, mesh, 8)
+    assert info["pp"] == 2 and info["n_micro"] == 4
+    assert info["bubble_fraction"] == PIPE.bubble_fraction(2, 4)
+
+
+# ---------------------------------------------------------------------------
+# declarative custom plans in run YAML
+# ---------------------------------------------------------------------------
+def test_inline_plan_mapping_normalizes_to_component_node():
+    doc = {
+        "run": {"kind": "dryrun", "name": "t"},
+        "plan": {"tp": True, "pp": 2, "fsdp_axes": ["data"]},
+        "gym": {"component_key": "gym", "variant_key": "standard",
+                "config": {"sharding_plan": {"pp": 2}}},
+    }
+    cfg = parse_run_doc(doc)
+    node = cfg.graph["plan"]
+    assert node["component_key"] == "sharding_plan"
+    assert node["variant_key"] == "custom"
+    assert node["config"] == {"tp": True, "pp": 2, "fsdp_axes": ["data"]}
+    nested = cfg.graph["gym"]["config"]["sharding_plan"]
+    assert nested["variant_key"] == "custom"
+    assert nested["config"] == {"pp": 2}
+    # already-component nodes and references pass through untouched
+    doc2 = {"run": {"kind": "dryrun"},
+            "plan": {"component_key": "sharding_plan", "variant_key": "fsdp",
+                     "config": {}},
+            "gym": {"config": {"sharding_plan": {"instance_key": "plan"}}}}
+    cfg2 = parse_run_doc(doc2)
+    assert cfg2.graph["plan"]["variant_key"] == "fsdp"
+    assert cfg2.graph["gym"]["config"]["sharding_plan"] == {
+        "instance_key": "plan"}
+
+
+def test_custom_plan_registry_variant():
+    from repro.config.registry import DEFAULT_REGISTRY as REG
+    import repro.core.components  # noqa: F401  (registers everything)
+
+    plan = REG.build("sharding_plan", "custom", tp=True, pp=2, n_micro=4)
+    assert isinstance(plan, PL.ShardingPlan)
+    assert plan.pp == 2 and plan.tp
+    for name in ("pp2_fsdp", "pp2_fsdp_tp", "pp2_fsdp_tp_ep"):
+        assert REG.build("sharding_plan", name).pp == 2
+
+
+# ---------------------------------------------------------------------------
+# composed-plan parity on 8 fake devices
+# ---------------------------------------------------------------------------
+_PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, json, sys
+    import jax, jax.numpy as jnp, numpy as np
+    sys.path.insert(0, {src!r})
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.optim.adamw import AdamW
+    from repro.sharding import plans as PL
+    from repro.train import steps as ST
+    from repro.launch.mesh import make_local_mesh
+
+    cfg = get_reduced({arch!r})
+    if cfg.moe:
+        cfg = dataclasses.replace(
+            cfg, n_layers=4,
+            moe=dataclasses.replace(cfg.moe, n_dense_layers=2))
+    else:
+        cfg = dataclasses.replace(cfg, n_layers=4)
+    model = build_model(cfg)
+    opt = AdamW(lr=1e-3)
+    rng = jax.random.PRNGKey(0)
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                         cfg.vocab))
+    batch = {{"tokens": jnp.asarray(toks),
+              "labels": jnp.roll(jnp.asarray(toks), -1, axis=1)}}
+
+    # reference: unpipelined single-device run
+    state_host = jax.device_get(ST.init_train_state(model, opt,
+                                                    jax.random.PRNGKey(0)))
+    ref_step = jax.jit(ST.make_train_step(model, opt, None, ()))
+    sr = jax.device_put(state_host)
+    ref = []
+    for i in range(3):
+        sr, m = ref_step(sr, batch)
+        ref.append(float(m["loss"]))
+
+    cases = [("pp2_fsdp", 4, 1, 2), ("pp2_fsdp_tp", 2, 2, 2)]
+    if cfg.moe:
+        cases.append(("pp2_fsdp_tp_ep", 2, 2, 2))
+    losses = {{"reference": ref}}
+    for plan_name, dp, tp, pp in cases:
+        mesh = make_local_mesh(dp=dp, tp=tp, pp=pp)
+        plan = PL.make_plan(plan_name)
+        ctx = PL.mesh_context(plan, mesh)
+        assert ctx.pp == pp and ctx.pipe_axis == "pipe"
+        sh, warns = PL.train_state_shardings(plan, mesh, model, opt)
+        # staged layout: at least one stacked leaf is sharded over pipe
+        specs = jax.tree_util.tree_leaves(
+            sh["params"], is_leaf=lambda s: hasattr(s, "spec"))
+        assert any("pipe" in str(s.spec) for s in specs), plan_name
+        with mesh:
+            state = jax.device_put(state_host, sh)
+            step = jax.jit(ST.make_train_step(
+                model, opt, ctx, plan.ep_storage_axes if plan.ep else ()))
+            traj = []
+            for i in range(3):
+                state, m = step(state, batch)
+                traj.append(float(m["loss"]))
+        losses[plan_name] = traj
+    print(json.dumps(losses))
+""")
+
+
+@pytest.mark.parametrize("arch", ["qwen1p5_0p5b", "deepseek_moe_16b"])
+def test_composed_plan_parity_8dev(arch):
+    """pp×fsdp×tp (and pp×ep for MoE) loss curves match the single-device
+    unpipelined reference step for step."""
+    script = _PARITY_SCRIPT.format(src=os.path.abspath(SRC), arch=arch)
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    losses = json.loads(proc.stdout.strip().splitlines()[-1])
+    ref = losses.pop("reference")
+    assert len(losses) >= 2
+    for name, traj in losses.items():
+        for got, want in zip(traj, ref):
+            assert abs(got - want) < 2e-2, (name, traj, ref)
+
+
+_GRAD_ACCUM_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, json, sys
+    import jax, jax.numpy as jnp, numpy as np
+    sys.path.insert(0, {src!r})
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.optim.adamw import AdamW
+    from repro.sharding import plans as PL
+    from repro.train import steps as ST
+    from repro.launch.mesh import make_local_mesh
+
+    cfg = dataclasses.replace(get_reduced("qwen1p5_0p5b"), n_layers=4)
+    model = build_model(cfg)
+    opt = AdamW(lr=1e-3)
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                         cfg.vocab))
+    batch = {{"tokens": jnp.asarray(toks),
+              "labels": jnp.roll(jnp.asarray(toks), -1, axis=1)}}
+    state_host = jax.device_get(ST.init_train_state(model, opt,
+                                                    jax.random.PRNGKey(0)))
+    ref_step = jax.jit(ST.make_train_step(model, opt, None, (), grad_accum=2))
+    sr = jax.device_put(state_host)
+    ref = []
+    for i in range(2):
+        sr, m = ref_step(sr, batch)
+        ref.append(float(m["loss"]))
+
+    mesh = make_local_mesh(dp=2, tp=2, pp=2)
+    plan = PL.make_plan("pp2_fsdp_tp")
+    ctx = PL.mesh_context(plan, mesh)
+    sh, _ = PL.train_state_shardings(plan, mesh, model, opt)
+    with mesh:
+        state = jax.device_put(state_host, sh)
+        step = jax.jit(ST.make_train_step(model, opt, ctx, (), grad_accum=2))
+        traj = []
+        for i in range(2):
+            state, m = step(state, batch)
+            traj.append(float(m["loss"]))
+    print(json.dumps({{"reference": ref, "pp2_accum": traj}}))
+""")
+
+
+def test_grad_accum_composes_with_pipeline_8dev():
+    """grad_accum > 1 on top of a pipelined plan: each accum chunk is
+    itself pipelined; the ≥f32 accumulation semantics are unchanged."""
+    script = _GRAD_ACCUM_SCRIPT.format(src=os.path.abspath(SRC))
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    for got, want in zip(out["pp2_accum"], out["reference"]):
+        assert abs(got - want) < 2e-2, out
